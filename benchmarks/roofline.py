@@ -1,0 +1,125 @@
+"""§Roofline — derive the three roofline terms per (arch × shape × mesh)
+from the dry-run's compiled artifacts (experiments/dryrun/*.json).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s      (cost_analysis is
+               per-device for SPMD-partitioned modules)
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (serve);
+the ratio MODEL_FLOPS / global_HLO_FLOPs exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_line
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+_FIX = {
+    "compute": "raise arithmetic intensity (bigger per-chip batch/seq "
+               "shard) or cast more matmuls to bf16",
+    "memory": "cut HBM traffic: CoDR weight compression, int8 KV cache, "
+              "fewer remat passes, fused attention",
+    "collective": "reshard to cheaper collectives: 2D weight-stationary "
+                  "serving, overlap psum with compute, bf16 grads",
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_terms(rec: dict) -> dict | None:
+    if rec.get("status") != "OK":
+        return None
+    chips = rec["n_devices"]
+    la = rec.get("hlo_loop_aware") or {}
+    # loop-aware parse preferred; xla cost_analysis counts while bodies
+    # once and under-reports scanned-layer models by n_layers×
+    fl = la.get("flops") or rec["cost"]["flops"] or 0.0
+    by = la.get("bytes") or rec["cost"]["bytes_accessed"] or 0.0
+    cb = rec["collectives"]["total_bytes"] or 0.0
+    t_c = fl / PEAK_FLOPS_BF16
+    t_m = by / HBM_BW
+    t_x = cb / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    ratio = mf / max(fl * chips, 1.0)
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom, "model_flops": mf, "useful_ratio": ratio,
+            "fix": _FIX[dom],
+            "roofline_frac": max(t_c, t_m, t_x) and t_c / max(t_c, t_m, t_x)}
+
+
+def markdown_table(recs: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s |"
+            " dominant | useful FLOPs ratio | peak GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in recs:
+        if rec.get("status") == "SKIP":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+                        f" — | — | — | SKIP | — | — |")
+            continue
+        t = roofline_terms(rec)
+        if t is None:
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+                        f" FAIL | | | | | |")
+            continue
+        peak = (rec["memory"]["peak_bytes"] or 0) / 1e9
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | **{t['dominant']}** "
+            f"| {t['useful_ratio']:.2f} | {peak:.1f} |")
+    return "\n".join(rows)
+
+
+def main(print_fn=print) -> list[str]:
+    recs = load_records()
+    lines = []
+    for rec in recs:
+        t = roofline_terms(rec)
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("tag"):
+            name += f"/{rec['tag']}"
+        if rec.get("status") == "SKIP":
+            lines.append(csv_line(name, 0.0, "SKIP"))
+        elif t is None:
+            lines.append(csv_line(name, 0.0, "FAIL"))
+        else:
+            step_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+            lines.append(csv_line(
+                name, step_s * 1e6,
+                f"dom={t['dominant']};compute={t['compute_s']:.3e}"
+                f";memory={t['memory_s']:.3e}"
+                f";collective={t['collective_s']:.3e}"
+                f";useful={t['useful_ratio']:.2f}"))
+        print_fn(lines[-1])
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure plus the
+roofline report.  Prints ``name,us_per_call,derived`` CSV lines.
+
+  python -m benchmarks.run [--only fig6|fig7|fig8|kernels|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import compression, energy, kernels, roofline, sram_access
+
+SUITES = {
+    "fig6": compression.main,
+    "fig7": sram_access.main,
+    "fig8": energy.main,
+    "kernels": kernels.main,
+    "roofline": roofline.main,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(SUITES), default=None)
+    args = ap.parse_args(argv)
+    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.00,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 7 — SRAM access analysis (GoogleNet, density / unique
+sweeps).  Counts input/output/weight SRAM accesses under the three
+dataflows' loop orderings and reports CoDR's reduction factors
+(paper: 5.08× vs UCNN, 7.99× vs SCNN)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BASE_DENSITY, Timer, csv_line, \
+    make_weights, sampled_layer_vectors
+from repro.configs.paper_cnns import PAPER_CNNS
+from repro.core import dataflow, rle
+from repro.core.baselines.scnn import scnn_compress_bits
+from repro.core.baselines.ucnn import ucnn_vector_bits
+from repro.core.dataflow import CODR_TILING, SCNN_TILING, UCNN_TILING
+
+SWEEPS = [("U16", 1.0, 16), ("orig", 1.0, 256), ("D0.4", 0.4, 256)]
+
+
+def model_accesses(model: str, density: float, n_unique: int, rng) -> dict:
+    totals = {"CoDR": 0.0, "UCNN": 0.0, "SCNN": 0.0}
+    weight_share = {"CoDR": 0.0}
+    feat = {"CoDR": 0.0, "UCNN": 0.0, "SCNN": 0.0}
+    for shape in PAPER_CNNS[model]:
+        q = make_weights((shape.m, shape.n, shape.rk, shape.ck),
+                         density=density * BASE_DENSITY[model],
+                         n_unique=n_unique, rng=rng)
+        vecs, scale = sampled_layer_vectors(q, CODR_TILING.t_m,
+                                            CODR_TILING.t_n)
+        codr_bits = scale * rle.layer_bits_size_only(
+            vecs, CODR_TILING.t_m * shape.rk * shape.ck)
+        ucnn_bits = scale * sum(ucnn_vector_bits(u) for u in vecs)
+        scnn_bits = float(scnn_compress_bits(q))
+        nu = scale * sum(len(u.unique_vals) for u in vecs)
+        nn = scale * sum(u.n_nonzero for u in vecs)
+
+        a_codr = dataflow.codr_accesses(shape, CODR_TILING, codr_bits, nu, nn)
+        a_ucnn = dataflow.ucnn_accesses(shape, UCNN_TILING, ucnn_bits, nu, nn)
+        a_scnn = dataflow.scnn_accesses(shape, SCNN_TILING, scnn_bits, nu, nn)
+        totals["CoDR"] += a_codr.total_sram
+        totals["UCNN"] += a_ucnn.total_sram
+        totals["SCNN"] += a_scnn.total_sram
+        feat["CoDR"] += a_codr.feature_sram
+        feat["UCNN"] += a_ucnn.feature_sram
+        feat["SCNN"] += a_scnn.feature_sram
+        weight_share["CoDR"] += a_codr.weight_sram_rows
+    return {
+        "x_ucnn": totals["UCNN"] / totals["CoDR"],
+        "x_scnn": totals["SCNN"] / totals["CoDR"],
+        "codr_weight_frac": weight_share["CoDR"]
+        / max(totals["CoDR"], 1),
+        "feat_x_ucnn": feat["UCNN"] / max(feat["CoDR"], 1),
+        "feat_x_scnn": feat["SCNN"] / max(feat["CoDR"], 1),
+    }
+
+
+def main(print_fn=print) -> list[str]:
+    rng = np.random.default_rng(1)
+    lines = []
+    for tag, density, n_unique in SWEEPS:
+        with Timer() as t:
+            r = model_accesses("googlenet", density, n_unique, rng)
+        name = f"fig7_sram/googlenet/{tag}"
+        derived = (f"x_ucnn={r['x_ucnn']:.2f}(paper:5.08)"
+                   f";x_scnn={r['x_scnn']:.2f}(paper:7.99)"
+                   f";codr_weight_frac={r['codr_weight_frac']:.2f}(paper:0.50)"
+                   f";feat_x_ucnn={r['feat_x_ucnn']:.1f}"
+                   f";feat_x_scnn={r['feat_x_scnn']:.1f}")
+        lines.append(csv_line(name, t.dt * 1e6, derived))
+        print_fn(lines[-1])
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: train a reduced-config model end-to-end on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py --steps 100
+
+Uses the real framework stack: synthetic-but-structured data pipeline →
+model zoo → AdamW(+clip, cosine) → fault-tolerant loop with atomic async
+checkpoints.  Loss decreases because the data has learnable n-gram
+motifs.
+"""
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.data import DataConfig, host_batch_iterator
+from repro.models import get_model
+from repro.optim import AdamWConfig
+from repro.runtime import TrainLoop, TrainLoopConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} ({n/1e6:.2f}M params), "
+          f"{args.steps} steps @ batch={args.batch} seq={args.seq}")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, motif_prob=0.8,
+                      frontend=cfg.frontend, frontend_seq=cfg.frontend_seq,
+                      d_model=cfg.d_model)
+    with tempfile.TemporaryDirectory() as ckpt:
+        loop = TrainLoop(
+            train_loss_fn=lambda p, b: api.train_loss(p, b, cfg),
+            params=params,
+            batch_iter=host_batch_iterator(dcfg),
+            opt_cfg=AdamWConfig(lr=3e-3, use_master=False),
+            loop_cfg=TrainLoopConfig(total_steps=args.steps,
+                                     checkpoint_every=max(args.steps // 2, 1),
+                                     ckpt_dir=ckpt, peak_lr=3e-3,
+                                     warmup_steps=min(10, args.steps // 3)))
+        hist = loop.run()
+    k = max(min(10, len(hist) // 3), 1)
+    first = np.mean([h["loss"] for h in hist[:k]])
+    last = np.mean([h["loss"] for h in hist[-k:]])
+    print(f"loss: {first:.4f} -> {last:.4f} over {len(hist)} steps "
+          f"({'improved' if last < first else 'flat'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Serving with CoDR-compressed weights (the paper's technique as a
+first-class serving feature): batched prefill + greedy decode, before and
+after offline UCR+RLE compression, with measured compression ratios and
+the TPU-target HBM traffic model.
+
+    PYTHONPATH=src python examples/serve_codr.py --arch qwen2.5-3b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--codr" not in sys.argv:
+        sys.argv.append("--codr")
+    main()

@@ -1,0 +1,12 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    n_experts=32, moe_top_k=8, moe_d_ff=512,
+    tied_embeddings=True, rope_theta=1e4,
+)

@@ -1,0 +1,9 @@
+"""Baseline accelerators the paper compares against (SCNN [1], UCNN [5]).
+
+The paper's evaluation is relative — we implement both baselines'
+compression schemes and dataflows so every CoDR claim has an in-repo
+counterpart."""
+from repro.core.baselines.scnn import scnn_compress_bits
+from repro.core.baselines.ucnn import ucnn_compress_bits
+
+__all__ = ["scnn_compress_bits", "ucnn_compress_bits"]

@@ -1,0 +1,109 @@
+"""CoDR-compressed linear layers for JAX models.
+
+Three representations of the same weights, used at different levels:
+
+1. **RLE streams** (`repro.core.rle`) — the paper's exact variable-width
+   format.  Used for DRAM/storage accounting and the offline encoder; a
+   variable-width bitstream is not expressible as a static-shape XLA
+   buffer, so it does not appear in compiled graphs (documented in
+   DESIGN.md §2).
+2. **Fixed-width unique-index pack** — the TPU-native adaptation: weights
+   stored as ``b``-bit indices into a per-tensor sorted unique table,
+   packed into uint32 words.  ``b = ceil(log2(U))`` is searched like the
+   paper's encoding parameter, subject to TPU word alignment.  This is the
+   format the Pallas kernel decodes in VMEM; HBM traffic = b/8 bytes per
+   weight.
+3. **Plain int8 + scale** — weight-only quantization fallback, XLA-visible
+   in the dry-run serving graphs (1 byte/weight HBM traffic).
+
+The unique-table format realises *weight repetition* and *sparsity*
+(zero is just another table entry) in the kernel; *similarity* (Δ
+encoding) lives in representation 1, where variable-width coding is
+possible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PackedWeight", "pack_unique", "unpack_unique",
+           "codr_matmul_ref", "choose_bits"]
+
+
+@dataclasses.dataclass
+class PackedWeight:
+    """Fixed-width unique-index packed weight for a (K, N) matrix."""
+
+    packed: jax.Array      # (K, N * bits // 32) uint32
+    table: jax.Array       # (2**bits,) float32/bf16 unique values (padded)
+    scale: jax.Array       # per-tensor or per-column scale
+    bits: int
+    shape: tuple[int, int]
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.packed.size * 4 + self.table.size * 2 + self.scale.size * 4
+
+    @property
+    def dense_bf16_bytes(self) -> int:
+        return int(np.prod(self.shape)) * 2
+
+    @property
+    def compression_vs_bf16(self) -> float:
+        return self.dense_bf16_bytes / self.hbm_bytes
+
+
+def choose_bits(n_unique: int) -> int:
+    """Smallest TPU-friendly index width covering ``n_unique`` values.
+    Widths are restricted to divisors of 32 (clean word packing)."""
+    for b in (1, 2, 4, 8, 16):
+        if n_unique <= (1 << b):
+            return b
+    raise ValueError(f"too many unique values: {n_unique}")
+
+
+def pack_unique(q: np.ndarray, scale: np.ndarray | float,
+                dtype=jnp.bfloat16) -> PackedWeight:
+    """Pack an int8 (K, N) weight matrix into the unique-index format."""
+    q = np.asarray(q)
+    assert q.ndim == 2, q.shape
+    k, n = q.shape
+    table = np.unique(q)                            # sorted ascending
+    bits = choose_bits(len(table))
+    per_word = 32 // bits
+    if n % per_word:
+        raise ValueError(f"N={n} not divisible by {per_word} ({bits}-bit pack)")
+    idx = np.searchsorted(table, q).astype(np.uint32)   # (K, N)
+    idx = idx.reshape(k, n // per_word, per_word)
+    shifts = (np.arange(per_word, dtype=np.uint32) * bits)[None, None, :]
+    packed = (idx << shifts).astype(np.uint32).sum(axis=-1, dtype=np.uint32)
+    padded = np.zeros(1 << bits, dtype=np.float32)
+    padded[: len(table)] = table
+    return PackedWeight(
+        packed=jnp.asarray(packed),
+        table=jnp.asarray(padded, dtype=dtype),
+        scale=jnp.asarray(scale, dtype=jnp.float32),
+        bits=bits, shape=(k, n))
+
+
+@partial(jax.jit, static_argnames=("bits", "n"))
+def unpack_unique(packed: jax.Array, table: jax.Array, *, bits: int,
+                  n: int) -> jax.Array:
+    """Decode packed indices → dense weight matrix (table gather)."""
+    per_word = 32 // bits
+    shifts = jnp.arange(per_word, dtype=jnp.uint32) * bits
+    mask = jnp.uint32((1 << bits) - 1)
+    idx = (packed[:, :, None] >> shifts[None, None, :]) & mask
+    idx = idx.reshape(packed.shape[0], n)
+    return jnp.take(table, idx.astype(jnp.int32), axis=0)
+
+
+def codr_matmul_ref(x: jax.Array, w: PackedWeight) -> jax.Array:
+    """Reference decode-then-matmul (the Pallas kernel fuses these)."""
+    dense = unpack_unique(w.packed, w.table, bits=w.bits, n=w.shape[1])
+    y = jnp.dot(x.astype(jnp.float32), dense.astype(jnp.float32))
+    return (y * w.scale).astype(x.dtype)

@@ -1,0 +1,216 @@
+"""CoDR dataflow engine: tiling, loop ordering, and SRAM access counting
+(paper §III-B, §IV, Table I, Figs. 5/7).
+
+These are analytical loop-nest access counters (the paper uses a
+cycle-accurate simulator; the loop-nest algebra below counts the same
+events — every SRAM/RF touch implied by the stationarity of each
+dataflow).  Counts feed :mod:`repro.core.cost_model` for the Fig. 7/8
+reproductions.
+
+Dataflow summaries (per the paper):
+
+* **CoDR** — fully output stationary (each output feature written once) and
+  semi input stationary (inputs fetched ``ceil(M / (T_PU*T_M))`` times);
+  weights re-streamed per spatial output tile — cheap, they are RLE
+  compressed to ~1.69 bits/weight and read in wide sequential rows.
+* **UCNN** — dot-product dataflow; partial sums accumulate in SRAM across
+  input-channel tiles (outputs touched ~2*ceil(N/T_N) times), inputs
+  re-fetched per kernel window overlap.
+* **SCNN** — input stationary (inputs read once); scattered partial-sum
+  crossbar traffic hits the output SRAM read+write per input-channel step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["ConvShape", "TilingConfig", "CODR_TILING", "UCNN_TILING",
+           "SCNN_TILING", "AccessCounts", "codr_accesses", "ucnn_accesses",
+           "scnn_accesses"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvShape:
+    m: int                  # output channels
+    n: int                  # input channels
+    rk: int                 # kernel rows
+    ck: int                 # kernel cols
+    ri: int                 # input rows
+    ci: int                 # input cols
+    stride: int = 1
+
+    @property
+    def ro(self) -> int:
+        return (self.ri - self.rk) // self.stride + 1
+
+    @property
+    def co(self) -> int:
+        return (self.ci - self.ck) // self.stride + 1
+
+    @property
+    def n_weights(self) -> int:
+        return self.m * self.n * self.rk * self.ck
+
+    @property
+    def n_outputs(self) -> int:
+        return self.m * self.ro * self.co
+
+    @property
+    def n_inputs(self) -> int:
+        return self.n * self.ri * self.ci
+
+    @property
+    def macs(self) -> int:
+        return self.n_outputs * self.n * self.rk * self.ck
+
+
+@dataclasses.dataclass(frozen=True)
+class TilingConfig:
+    """Table I RTL tiling parameters."""
+
+    name: str
+    t_pu: int
+    t_m: int
+    t_n: int
+    t_ro: int
+    t_co: int
+    t_ri: int
+    t_ci: int
+    mults_per_pu: int
+    weight_row_bits: int = 64   # weight SRAM streams wide sequential rows
+
+
+CODR_TILING = TilingConfig("CoDR", 8, 4, 4, 8, 8, 20, 20, 64)
+UCNN_TILING = TilingConfig("UCNN", 48, 1, 4, 1, 8, 1, 12, 8)
+SCNN_TILING = TilingConfig("SCNN", 21, 2, 1, 1, 1, 1, 1, 16)
+
+
+@dataclasses.dataclass
+class AccessCounts:
+    """All counts are in number of accesses of the stated granularity:
+    features are 8-bit word accesses; weight SRAM accesses are wide-row
+    reads (``weight_row_bits`` each); RF accesses are 8-bit."""
+
+    name: str
+    input_sram: float
+    output_sram: float
+    weight_sram_rows: float
+    weight_bits_streamed: float
+    input_rf: float
+    weight_rf: float
+    output_rf: float
+    mults: float
+    accums: float
+    crossbar: float
+    dram_weight_bits: float
+    dram_feature_bytes: float
+
+    @property
+    def feature_sram(self) -> float:
+        return self.input_sram + self.output_sram
+
+    @property
+    def total_sram(self) -> float:
+        return self.input_sram + self.output_sram + self.weight_sram_rows
+
+
+def _spatial_tiles(shape: ConvShape, cfg: TilingConfig) -> int:
+    return math.ceil(shape.ro / cfg.t_ro) * math.ceil(shape.co / cfg.t_co)
+
+
+def codr_accesses(shape: ConvShape, cfg: TilingConfig,
+                  compressed_bits: float, n_unique: float,
+                  n_nonzero: float) -> AccessCounts:
+    """CoDR loop ordering (Fig. 5a circled 1–4):
+
+    for m_group in M / (T_PU*T_M):          # ④ outputs written once
+      for spatial tile in RO/T_RO × CO/T_CO:  # ③
+        for n in N:                           # ② accumulate over inputs
+          stream compressed weights           # ① re-streamed per tile
+    """
+    m_groups = math.ceil(shape.m / (cfg.t_pu * cfg.t_m))
+    spatial = _spatial_tiles(shape, cfg)
+
+    output_sram = float(shape.n_outputs)                       # written once
+    input_sram = float(shape.n_inputs) * m_groups              # semi-stationary
+    weight_bits = compressed_bits * spatial                    # re-streamed
+    weight_rows = weight_bits / cfg.weight_row_bits
+
+    # MPE: each unique weight multiplies the halo window its repetitions
+    # can address — (T_RO+R_K−1)×(T_CO+C_K−1) lanes (unused tile lanes are
+    # gated); APE accumulates one product window per repetition.
+    tile_elems = min((cfg.t_ro + shape.rk - 1) * (cfg.t_co + shape.ck - 1),
+                     cfg.t_ri * cfg.t_ci)
+    out_tile_elems = cfg.t_ro * cfg.t_co
+    mults = n_unique * tile_elems * spatial
+    accums = n_nonzero * out_tile_elems * spatial
+    input_rf = mults                                           # matrix operand reads
+    output_rf = 2.0 * accums                                   # read-modify-write
+    weight_rf = weight_bits / 8.0                              # decoder feed
+    crossbar = accums                                          # MPE→APE routing
+
+    return AccessCounts(
+        name=cfg.name, input_sram=input_sram, output_sram=output_sram,
+        weight_sram_rows=weight_rows, weight_bits_streamed=weight_bits,
+        input_rf=input_rf, weight_rf=weight_rf, output_rf=output_rf,
+        mults=mults, accums=accums, crossbar=crossbar,
+        dram_weight_bits=compressed_bits,
+        dram_feature_bytes=float(shape.n_inputs + shape.n_outputs))
+
+
+def ucnn_accesses(shape: ConvShape, cfg: TilingConfig,
+                  compressed_bits: float, n_unique: float,
+                  n_nonzero: float) -> AccessCounts:
+    """UCNN dot-product dataflow: activation-group factorized dot products;
+    partial sums spill to SRAM across input-channel tiles; inputs re-read
+    per overlapping kernel window (T_RI×T_CI = 1×12 buffer only)."""
+    n_groups = math.ceil(shape.n / cfg.t_n)
+    # outputs: read+write per input-channel group (partial-sum accumulation)
+    output_sram = 2.0 * shape.n_outputs * n_groups
+    # inputs: 1×T_CI row buffer captures kernel-COLUMN overlap (÷ck) but
+    # not row overlap; each output row re-reads its RK rows, amortized
+    # over the T_M·T_PU outputs sharing a fetch.
+    input_sram = (shape.ro * shape.co * shape.rk * shape.ck * shape.n
+                  / max(shape.ck / shape.stride, 1.0)
+                  * max(1.0, shape.m / (cfg.t_pu * cfg.t_m)))
+    weight_bits = compressed_bits * math.ceil(shape.ro / cfg.t_co)
+    weight_rows = weight_bits / cfg.weight_row_bits
+
+    # factorized dot product: one multiply per unique weight per output,
+    # adds for every nonzero term.
+    mults = n_unique * shape.ro * shape.co
+    accums = n_nonzero * shape.ro * shape.co
+    return AccessCounts(
+        name=cfg.name, input_sram=input_sram, output_sram=output_sram,
+        weight_sram_rows=weight_rows, weight_bits_streamed=weight_bits,
+        input_rf=accums, weight_rf=weight_bits / 8.0, output_rf=2.0 * mults,
+        mults=mults, accums=accums, crossbar=accums,
+        dram_weight_bits=compressed_bits,
+        dram_feature_bytes=float(shape.n_inputs + shape.n_outputs))
+
+
+def scnn_accesses(shape: ConvShape, cfg: TilingConfig,
+                  compressed_bits: float, n_unique: float,
+                  n_nonzero: float) -> AccessCounts:
+    """SCNN input-stationary cartesian-product dataflow: inputs read once;
+    every nonzero weight × input product is scattered through the crossbar
+    into output accumulator banks, spilling partial sums to SRAM per
+    input-channel step (T_N = 1)."""
+    input_sram = float(shape.n_inputs)                          # stationary
+    # psum spills: SCNN's accumulator banks hold one output tile; the
+    # cartesian-product scatter revisits outputs once per input-channel
+    # step, but an RF-resident fraction (~half) never leaves the banks.
+    n_steps = math.ceil(shape.n / cfg.t_n)
+    output_sram = 1.0 * shape.n_outputs * n_steps               # psum spills
+    weight_bits = compressed_bits
+    weight_rows = weight_bits / cfg.weight_row_bits
+    density = n_nonzero / max(shape.n_weights, 1)
+    mults = shape.macs * density                                # all nonzero
+    accums = mults
+    return AccessCounts(
+        name=cfg.name, input_sram=input_sram, output_sram=output_sram,
+        weight_sram_rows=weight_rows, weight_bits_streamed=weight_bits,
+        input_rf=mults, weight_rf=weight_bits / 8.0, output_rf=2.0 * mults,
+        mults=mults, accums=accums, crossbar=accums,
+        dram_weight_bits=compressed_bits,
+        dram_feature_bytes=float(shape.n_inputs + shape.n_outputs))

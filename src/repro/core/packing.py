@@ -1,0 +1,72 @@
+"""Bit-level packing utilities for the CoDR run-length encoder.
+
+The CoDR RLE streams are true variable-width bitstreams (paper Fig. 4):
+each field is ``flag_bit + payload`` where the payload is either the
+low-precision width ``b`` or the full-precision width.  We implement an
+exact bit-accurate packer/unpacker so compression ratios are measured in
+real bits, not estimates.
+
+Packing is fully vectorized (numpy).  Unpacking of variable-width streams
+is inherently sequential (the width of field ``k+1`` depends on the flag
+bit of field ``k``), so the decoder walks the bitstream with an integer
+cursor; this is only used in tests and the (small) kernel demos — the
+benchmarks use the vectorized size-only path in :mod:`repro.core.rle`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["pack_varbits", "unpack_bits", "BitReader"]
+
+
+def pack_varbits(values: np.ndarray, widths: np.ndarray) -> tuple[np.ndarray, int]:
+    """Pack ``values[i]`` into ``widths[i]`` bits each, LSB-first per field.
+
+    Returns ``(packed_uint8, total_bits)``.  Values must be non-negative and
+    fit in their widths (masked to width — caller is responsible for
+    two's-complement pre-encoding of negatives).
+    """
+    values = np.asarray(values, dtype=np.uint64)
+    widths = np.asarray(widths, dtype=np.int64)
+    if values.shape != widths.shape:
+        raise ValueError(f"shape mismatch {values.shape} vs {widths.shape}")
+    total_bits = int(widths.sum())
+    if total_bits == 0:
+        return np.zeros(0, dtype=np.uint8), 0
+    # index of the source value for every output bit
+    field_idx = np.repeat(np.arange(len(values)), widths)
+    # bit position within each field (0 = LSB)
+    offsets = np.cumsum(widths) - widths
+    bitpos = np.arange(total_bits, dtype=np.int64) - np.repeat(offsets, widths)
+    bits = ((values[field_idx] >> bitpos.astype(np.uint64)) & 1).astype(np.uint8)
+    packed = np.packbits(bits, bitorder="little")
+    return packed, total_bits
+
+
+def unpack_bits(packed: np.ndarray, total_bits: int) -> np.ndarray:
+    """Inverse of the bit-expansion in :func:`pack_varbits` — returns the raw
+    0/1 bit array of length ``total_bits``."""
+    bits = np.unpackbits(np.asarray(packed, dtype=np.uint8), bitorder="little")
+    return bits[:total_bits]
+
+
+class BitReader:
+    """Sequential cursor over a packed bitstream (LSB-first fields)."""
+
+    def __init__(self, packed: np.ndarray, total_bits: int):
+        self._bits = unpack_bits(packed, total_bits)
+        self.pos = 0
+
+    @property
+    def remaining(self) -> int:
+        return len(self._bits) - self.pos
+
+    def read(self, width: int) -> int:
+        if width == 0:
+            return 0
+        if self.pos + width > len(self._bits):
+            raise EOFError("bitstream exhausted")
+        chunk = self._bits[self.pos : self.pos + width]
+        self.pos += width
+        # LSB-first
+        return int((chunk.astype(np.uint64) << np.arange(width, dtype=np.uint64)).sum())

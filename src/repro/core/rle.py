@@ -1,0 +1,371 @@
+"""Customized Run-Length Encoding (paper §III-C, Fig. 4).
+
+CoDR stores three data structures per weight vector (one vector = the
+weights of one input channel across a T_M-output-channel tile, paper
+§II-D step iii):
+
+  (a) **Unique-weight Δs** — differences between successive *sorted*
+      non-zero unique weights (the first entry is the Δ from zero, i.e.
+      the smallest unique weight itself, which may be negative).
+      Encoded as ``b`` low-precision bits + 1 escape bit; values that do
+      not fit fall back to full precision (8 bits for int8 weights).
+  (b) **Repetition counts** — how many times each unique weight repeats
+      (range ``[1, T_M*R_K*C_K]``).  Fixed ``b``-bit fields; on overflow a
+      *dummy unique weight with Δ=0* is inserted to carry the remainder
+      (paper: "a dummy unique weight with Δ=0 is inserted ... to track the
+      overflowed portion").
+  (c) **Indexes** — output indexes of every repetition.  Same escape
+      scheme as (a) except the fallback is the *absolute* index, used when
+      the index Δ is negative or does not fit.
+
+The encoder searches the encoding parameter (bit-length) of each structure
+independently and per layer, exactly as §III-C prescribes, and the chosen
+parameters ride along in the header.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.packing import BitReader, pack_varbits
+
+FULL_BITS = 8            # full-precision fallback width for int8 weight deltas
+HEADER_BITS = 32         # per-stream header: 4b param + 28b count (modelled)
+PARAM_SEARCH_SPACE = range(1, 9)
+
+
+@dataclasses.dataclass
+class Stream:
+    """One encoded RLE stream."""
+
+    packed: np.ndarray       # uint8 payload
+    nbits: int               # exact payload bits
+    param: int               # chosen low-precision bit-length
+    count: int               # number of fields
+    mode_bits: int           # width of the absolute/full-precision fallback
+
+    @property
+    def total_bits(self) -> int:
+        return self.nbits + HEADER_BITS
+
+
+@dataclasses.dataclass
+class EncodedVector:
+    """All three streams for one UCR weight vector + metadata."""
+
+    deltas: Stream
+    reps: Stream
+    indexes: Stream
+    vector_len: int          # T_M * R_K * C_K (index space)
+    n_unique: int            # unique non-zero weights incl. overflow dummies
+    n_weights: int           # non-zero weight count (== number of indexes)
+
+    @property
+    def total_bits(self) -> int:
+        return self.deltas.total_bits + self.reps.total_bits + self.indexes.total_bits
+
+
+# ---------------------------------------------------------------------------
+# escape-coded streams (Δs and indexes)
+# ---------------------------------------------------------------------------
+
+def _escape_fields(values: np.ndarray, low_bits: int, full_bits: int,
+                   absolute: np.ndarray | None = None):
+    """Compute (field_values, field_widths, escape_flags) for the escape
+    scheme: each field is ``payload`` then 1 flag bit appended at the LSB
+    position of the *next* read — we model it as flag(1) + payload(w).
+
+    ``absolute`` — when given (index stream), values that escape are encoded
+    as these absolute values instead of their Δ (paper §III-C "Indexes").
+    """
+    values = np.asarray(values, dtype=np.int64)
+    fits = (values >= 0) & (values < (1 << low_bits))
+    payload = np.where(fits, values, 0)
+    if absolute is not None:
+        payload = np.where(fits, values, absolute)
+    else:
+        # two's complement into full_bits for negatives / overflow
+        payload = np.where(fits, values, values & ((1 << full_bits) - 1))
+    widths = np.where(fits, low_bits, full_bits)
+    # field = flag bit (0 = low precision, 1 = escape) + payload
+    fields = (payload.astype(np.uint64) << np.uint64(1)) | (~fits).astype(np.uint64)
+    return fields, widths + 1, fits
+
+
+def escape_stream_bits(values: np.ndarray, low_bits: int, full_bits: int) -> int:
+    """Vectorized size-only path (used by the parameter search and the
+    compression benchmarks — no bitstream materialization)."""
+    values = np.asarray(values, dtype=np.int64)
+    fits = (values >= 0) & (values < (1 << low_bits))
+    return int(np.where(fits, low_bits + 1, full_bits + 1).sum())
+
+
+def encode_escape_stream(values: np.ndarray, low_bits: int, full_bits: int,
+                         absolute: np.ndarray | None = None) -> Stream:
+    fields, widths, _ = _escape_fields(values, low_bits, full_bits, absolute)
+    packed, nbits = pack_varbits(fields, widths)
+    return Stream(packed, nbits, low_bits, len(values), full_bits)
+
+
+def decode_escape_stream(stream: Stream, *, absolute_mode: bool = False) -> np.ndarray:
+    """Decode an escape stream.  Payloads are unsigned (Δ streams are
+    pre-biased to non-negative values — see ``delta_transform``).  With
+    ``absolute_mode`` the caller also gets the escape flags to rebuild a
+    mixed Δ/absolute position sequence."""
+    reader = BitReader(stream.packed, stream.nbits)
+    out = np.empty(stream.count, dtype=np.int64)
+    escaped = np.zeros(stream.count, dtype=bool)
+    for i in range(stream.count):
+        flag = reader.read(1)
+        if flag:
+            out[i] = reader.read(stream.mode_bits)
+            escaped[i] = True
+        else:
+            out[i] = reader.read(stream.param)
+    return out if not absolute_mode else np.stack([out, escaped.astype(np.int64)])
+
+
+# ---------------------------------------------------------------------------
+# fixed-width repetition-count stream
+# ---------------------------------------------------------------------------
+
+def split_rep_overflow(reps: np.ndarray, rep_bits: int) -> tuple[np.ndarray, np.ndarray]:
+    """Split repetition counts that overflow ``rep_bits`` into chains of
+    entries, inserting dummy unique weights (Δ=0) for the carried portion.
+
+    Returns ``(rep_entries, dummy_mask)`` where ``dummy_mask[i]`` is True for
+    entries that correspond to an inserted dummy (their Δ is 0).  Each entry
+    stores ``count - 1`` in ``rep_bits`` bits, so one entry covers counts in
+    ``[1, 2**rep_bits]``.
+    """
+    cap = 1 << rep_bits
+    reps = np.asarray(reps, dtype=np.int64)
+    n_entries = np.maximum(1, np.ceil(reps / cap)).astype(np.int64)
+    total = int(n_entries.sum())
+    entries = np.full(total, cap, dtype=np.int64)
+    dummy = np.ones(total, dtype=bool)
+    # first entry of each chain is the real unique weight; remainder entries
+    # are dummies.  The *last* entry of a chain holds the leftover count.
+    starts = np.cumsum(n_entries) - n_entries
+    ends = starts + n_entries - 1
+    leftover = reps - (n_entries - 1) * cap
+    entries[ends] = leftover
+    dummy[starts] = False
+    return entries, dummy
+
+
+def rep_stream_bits(reps: np.ndarray, rep_bits: int, delta_cost_bits: float) -> float:
+    """Size of the repetition stream *including* the Δ-stream bits induced by
+    overflow dummies (each dummy adds one Δ=0 field to the Δ stream)."""
+    cap = 1 << rep_bits
+    reps = np.asarray(reps, dtype=np.int64)
+    n_entries = np.maximum(1, np.ceil(reps / cap)).astype(np.int64)
+    n_dummies = int(n_entries.sum()) - len(reps)
+    return float(int(n_entries.sum()) * rep_bits + n_dummies * delta_cost_bits)
+
+
+def encode_rep_stream(entries: np.ndarray, rep_bits: int) -> Stream:
+    entries = np.asarray(entries, dtype=np.int64)
+    fields = (entries - 1).astype(np.uint64)          # store count-1
+    widths = np.full(len(entries), rep_bits, dtype=np.int64)
+    packed, nbits = pack_varbits(fields, widths)
+    return Stream(packed, nbits, rep_bits, len(entries), rep_bits)
+
+
+def decode_rep_stream(stream: Stream) -> np.ndarray:
+    reader = BitReader(stream.packed, stream.nbits)
+    return np.array([reader.read(stream.param) + 1 for _ in range(stream.count)],
+                    dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# full vector encode / decode
+# ---------------------------------------------------------------------------
+
+def delta_transform(unique_vals: np.ndarray) -> np.ndarray:
+    """Sorted unique int8 values → non-negative Δ fields.
+
+    The first field is the *absolute* smallest unique weight biased by
+    +128 (∈ [1, 255]); subsequent fields are the strictly positive Δs
+    (∈ [1, 254]).  Both fit the unsigned 8-bit full-precision fallback —
+    a signed encoding would need 9 bits for Δs up to 254 (paper Fig. 4
+    shows unsigned payloads).  Dummy overflow entries use Δ = 0.
+    """
+    unique_vals = np.asarray(unique_vals, dtype=np.int64)
+    out = np.empty(len(unique_vals), dtype=np.int64)
+    if len(out):
+        out[0] = unique_vals[0] + 128
+        out[1:] = np.diff(unique_vals)
+    return out
+
+
+def delta_untransform_first(field: int) -> int:
+    return field - 128
+
+
+def index_delta_fields(indexes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Δ between subsequent indexes in the flat stream; first index and any
+    negative Δ use absolute fallback (handled by the escape encoder)."""
+    indexes = np.asarray(indexes, dtype=np.int64)
+    deltas = np.empty_like(indexes)
+    if len(indexes):
+        deltas[0] = -1                        # force absolute for the first
+        deltas[1:] = indexes[1:] - indexes[:-1]
+    return deltas, indexes
+
+
+def search_delta_param(deltas: np.ndarray) -> int:
+    sizes = {b: escape_stream_bits(deltas, b, FULL_BITS) for b in PARAM_SEARCH_SPACE}
+    return min(sizes, key=sizes.get)
+
+
+def search_index_param(index_deltas: np.ndarray, index_bits: int) -> int:
+    space = [b for b in PARAM_SEARCH_SPACE if b <= index_bits] or [index_bits]
+    sizes = {b: escape_stream_bits(index_deltas, b, index_bits) for b in space}
+    return min(sizes, key=sizes.get)
+
+
+def search_rep_param(reps: np.ndarray, delta_cost_bits: float) -> int:
+    sizes = {b: rep_stream_bits(reps, b, delta_cost_bits) for b in PARAM_SEARCH_SPACE}
+    return min(sizes, key=sizes.get)
+
+
+def encode_vector(unique_vals: np.ndarray, reps: np.ndarray,
+                  indexes: np.ndarray, vector_len: int,
+                  params: tuple[int, int, int] | None = None
+                  ) -> EncodedVector:
+    """Encode one UCR-transformed weight vector (see :mod:`repro.core.ucr`).
+
+    ``unique_vals`` — sorted non-zero unique int8 values (ascending);
+    ``reps[i]``     — repetition count of ``unique_vals[i]``;
+    ``indexes``     — flat index stream (per-unique ascending positions).
+    ``params``      — optional (delta, rep, index) bit-lengths shared
+                      across a layer (paper §III-C: the encoder searches
+                      per layer and per structure; headers are then paid
+                      once per layer, see ``layer_params_search``).
+    """
+    unique_vals = np.asarray(unique_vals, dtype=np.int64)
+    reps = np.asarray(reps, dtype=np.int64)
+    indexes = np.asarray(indexes, dtype=np.int64)
+    index_bits = max(1, math.ceil(math.log2(max(vector_len, 2))))
+
+    # --- parameter search (independent per structure, §III-C) -------------
+    base_deltas = delta_transform(unique_vals)
+    if params is not None:
+        delta_param, rep_param, index_param_fixed = params
+    else:
+        delta_param = search_delta_param(base_deltas)
+        delta_cost = escape_stream_bits(base_deltas, delta_param,
+                                        FULL_BITS) / max(len(base_deltas), 1)
+        rep_param = search_rep_param(reps, delta_cost)
+        index_param_fixed = None
+
+    # --- overflow dummies --------------------------------------------------
+    rep_entries, dummy = split_rep_overflow(reps, rep_param)
+    # expand Δs with Δ=0 dummies at the dummy positions
+    full_deltas = np.zeros(len(rep_entries), dtype=np.int64)
+    full_deltas[~dummy] = base_deltas
+
+    idx_deltas, idx_abs = index_delta_fields(indexes)
+    index_param = (index_param_fixed if index_param_fixed is not None
+                   else search_index_param(idx_deltas, index_bits))
+    index_param = min(index_param, index_bits)
+
+    deltas_s = encode_escape_stream(full_deltas, delta_param, FULL_BITS)
+    reps_s = encode_rep_stream(rep_entries, rep_param)
+    indexes_s = encode_escape_stream(idx_deltas, index_param, index_bits,
+                                     absolute=idx_abs)
+    return EncodedVector(deltas_s, reps_s, indexes_s, vector_len,
+                         len(rep_entries), len(indexes))
+
+
+def decode_vector(enc: EncodedVector) -> np.ndarray:
+    """Reconstruct the dense int8 weight vector (inverse of UCR+RLE)."""
+    deltas = decode_escape_stream(enc.deltas)
+    reps = decode_rep_stream(enc.reps)
+    raw = decode_escape_stream(enc.indexes, absolute_mode=True)
+    vals, escaped = raw[0], raw[1].astype(bool)
+    # rebuild absolute indexes from the Δ/absolute mix
+    indexes = np.empty(enc.indexes.count, dtype=np.int64)
+    prev = 0
+    for i in range(enc.indexes.count):
+        indexes[i] = vals[i] if escaped[i] else prev + vals[i]
+        prev = indexes[i]
+
+    weights = np.zeros(enc.vector_len, dtype=np.int8)
+    running = 0
+    cursor = 0
+    for u in range(enc.n_unique):
+        if u == 0:
+            running = delta_untransform_first(int(deltas[0]))
+        else:
+            running += int(deltas[u])
+        for _ in range(int(reps[u])):
+            weights[indexes[cursor]] = running
+            cursor += 1
+    return weights
+
+
+def layer_params_search(ucr_vectors, vector_len: int) -> tuple[int, int, int]:
+    """Per-layer, per-structure parameter search over ALL of a layer's
+    vectors (paper §III-C: params are stored once per structure per layer
+    — headers amortize across the layer)."""
+    index_bits = max(1, math.ceil(math.log2(max(vector_len, 2))))
+    all_deltas = np.concatenate(
+        [delta_transform(u.unique_vals) for u in ucr_vectors]) \
+        if ucr_vectors else np.zeros(0, dtype=np.int64)
+    all_reps = np.concatenate([u.reps for u in ucr_vectors]) \
+        if ucr_vectors else np.zeros(0, dtype=np.int64)
+    all_idx = np.concatenate(
+        [index_delta_fields(u.indexes)[0] for u in ucr_vectors]) \
+        if ucr_vectors else np.zeros(0, dtype=np.int64)
+    dp = search_delta_param(all_deltas)
+    dcost = escape_stream_bits(all_deltas, dp, FULL_BITS) / max(len(all_deltas), 1)
+    rp = search_rep_param(all_reps, dcost)
+    ip = search_index_param(all_idx, index_bits)
+    return dp, rp, ip
+
+
+def layer_bits_size_only(ucr_vectors, vector_len: int) -> int:
+    """Exact encoded size of a whole layer under shared per-layer params
+    (vectorized — concatenated streams decompose per element)."""
+    if not ucr_vectors:
+        return 3 * HEADER_BITS
+    index_bits = max(1, math.ceil(math.log2(max(vector_len, 2))))
+    dp, rp, ip = layer_params_search(ucr_vectors, vector_len)
+    ip = min(ip, index_bits)
+    all_deltas = np.concatenate(
+        [delta_transform(u.unique_vals) for u in ucr_vectors])
+    all_reps = np.concatenate([u.reps for u in ucr_vectors])
+    all_idx = np.concatenate(
+        [index_delta_fields(u.indexes)[0] for u in ucr_vectors])
+    entries, dummy = split_rep_overflow(all_reps, rp)
+    full_deltas = np.zeros(len(entries), dtype=np.int64)
+    full_deltas[~dummy] = all_deltas
+    return (escape_stream_bits(full_deltas, dp, FULL_BITS)
+            + len(entries) * rp
+            + escape_stream_bits(all_idx, ip, index_bits)
+            + 3 * HEADER_BITS)
+
+
+def encoded_bits_size_only(unique_vals: np.ndarray, reps: np.ndarray,
+                           indexes: np.ndarray, vector_len: int) -> int:
+    """Fast vectorized total-bit count (no bitstream) — used by benchmarks."""
+    unique_vals = np.asarray(unique_vals, dtype=np.int64)
+    reps = np.asarray(reps, dtype=np.int64)
+    index_bits = max(1, math.ceil(math.log2(max(vector_len, 2))))
+    base_deltas = delta_transform(unique_vals)
+    delta_param = search_delta_param(base_deltas)
+    delta_cost = escape_stream_bits(base_deltas, delta_param, FULL_BITS) / max(len(base_deltas), 1)
+    rep_param = search_rep_param(reps, delta_cost)
+    rep_entries, dummy = split_rep_overflow(reps, rep_param)
+    full_deltas = np.zeros(len(rep_entries), dtype=np.int64)
+    full_deltas[~dummy] = base_deltas
+    idx_deltas, _ = index_delta_fields(indexes)
+    index_param = search_index_param(idx_deltas, index_bits)
+    return (escape_stream_bits(full_deltas, delta_param, FULL_BITS)
+            + len(rep_entries) * rep_param
+            + escape_stream_bits(idx_deltas, index_param, index_bits)
+            + 3 * HEADER_BITS)

@@ -1,0 +1,132 @@
+"""Scalar–matrix multiplication dataflow (paper §III-A, Fig. 3b) with
+differential computation (paper Eq. 1).
+
+This is the *faithful execution model* of a CoDR processing unit, in
+NumPy/JAX: each unique weight (reconstructed by the running Δ-sum — the
+differential accumulator) multiplies the whole input-feature matrix once,
+and every repetition index routes a window of that product to its output
+accumulator (the MPE→crossbar→APE path).
+
+It is the oracle the Pallas kernels and the cost model are validated
+against, and is bit-exact in int32 accumulation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ucr import LayerCode, UCRVector
+
+__all__ = ["conv2d_smm", "linear_smm", "conv2d_dense_ref", "decode_index"]
+
+
+def decode_index(flat_idx: int, kernel_shape: tuple[int, int]) -> tuple[int, int, int]:
+    """A flat index in a UCR vector of length ``T_M*R_K*C_K`` encodes the
+    (output-channel-within-tile, kernel-row, kernel-col) coordinate."""
+    rk, ck = kernel_shape
+    m = flat_idx // (rk * ck)
+    rem = flat_idx % (rk * ck)
+    return m, rem // ck, rem % ck
+
+
+def conv2d_dense_ref(x: np.ndarray, w: np.ndarray, stride: int = 1) -> np.ndarray:
+    """Dense int32 conv oracle. ``x``: (N, R_I, C_I) int, ``w``: (M, N, R_K, C_K)."""
+    n, ri, ci = x.shape
+    m, n2, rk, ck = w.shape
+    assert n == n2
+    ro, co = (ri - rk) // stride + 1, (ci - ck) // stride + 1
+    out = np.zeros((m, ro, co), dtype=np.int64)
+    for mm in range(m):
+        for nn in range(n):
+            for r in range(rk):
+                for c in range(ck):
+                    out[mm] += (w[mm, nn, r, c].astype(np.int64)
+                                * x[nn, r : r + stride * ro : stride,
+                                     c : c + stride * co : stride])
+    return out
+
+
+def conv2d_smm(x: np.ndarray, code: LayerCode, stride: int = 1) -> np.ndarray:
+    """CoDR execution: differential scalar–matrix multiply + index routing.
+
+    ``x``: (N, R_I, C_I) int8/int32 input features.
+    Returns int64 accumulations (pre-activation), identical to the dense
+    oracle — computation reuse changes *work*, not results.
+    """
+    m, n = code.shape[0], code.shape[1]
+    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
+    _, ri, ci = x.shape
+    ro, co = (ri - rk) // stride + 1, (ci - ck) // stride + 1
+    out = np.zeros((m, ro, co), dtype=np.int64)
+
+    vec_iter = iter(zip(code.vectors, code.ucr))
+    n_tiles_n = -(-n // code.t_n)
+    for m0 in range(0, m, code.t_m):
+        for n0idx in range(n_tiles_n):
+            n0 = n0idx * code.t_n
+            for nn in range(n0, min(n0 + code.t_n, n)):
+                _, u = next(vec_iter)
+                _smm_one_vector(out, x[nn], u, m0, (rk, ck), ro, co, stride)
+    return out
+
+
+def _smm_one_vector(out, x_plane, u: UCRVector, m0, kshape, ro, co, stride):
+    """One MPE pass: running Δ-sum over unique weights; scalar × matrix;
+    per-repetition window routed to APE ``m0 + m_local``."""
+    running = np.int64(0)
+    cursor = 0
+    x_plane = x_plane.astype(np.int64)
+    prev_product = None
+    for val, rep in zip(u.unique_vals, u.reps):
+        delta = np.int64(val) - running
+        running += delta
+        # differential computation (Eq. 1): Δ × I + previous product.
+        # bit-exact with running × I since int arithmetic is associative.
+        if prev_product is None:
+            product = running * x_plane
+        else:
+            product = delta * x_plane + prev_product
+        prev_product = product
+        for idx in u.indexes[cursor : cursor + int(rep)]:
+            m_local, r, c = decode_index(int(idx), kshape)
+            out[m0 + m_local] += product[r : r + stride * ro : stride,
+                                         c : c + stride * co : stride]
+        cursor += int(rep)
+
+
+def linear_smm(x: np.ndarray, code: LayerCode) -> np.ndarray:
+    """FC layer via SMM (paper Fig. 1 model): per input unit, the weight
+    column's unique values each multiply the input scalar once; indexes
+    route products to output accumulators."""
+    m, n = code.shape[0], code.shape[1]
+    out = np.zeros(m, dtype=np.int64)
+    vec_iter = iter(zip(code.vectors, code.ucr))
+    for m0 in range(0, m, code.t_m):
+        for n0 in range(0, n, code.t_n):
+            for nn in range(n0, min(n0 + code.t_n, n)):
+                _, u = next(vec_iter)
+                running = np.int64(0)
+                cursor = 0
+                xi = np.int64(x[nn])
+                prev = None
+                for val, rep in zip(u.unique_vals, u.reps):
+                    delta = np.int64(val) - running
+                    running += delta
+                    prev = delta * xi + (prev if prev is not None else np.int64(0))
+                    for idx in u.indexes[cursor : cursor + int(rep)]:
+                        out[m0 + int(idx)] += prev
+                    cursor += int(rep)
+    return out
+
+
+def smm_op_counts(code: LayerCode, feature_elems: int) -> dict:
+    """Multiplication / accumulation counts under UCR — the paper's ALU
+    story: multiplies ∝ unique weights (not total weights)."""
+    n_unique = sum(len(u.unique_vals) for u in code.ucr)
+    n_nonzero = sum(u.n_nonzero for u in code.ucr)
+    return {
+        "mults": n_unique * feature_elems,
+        "accums": n_nonzero * feature_elems,
+        "dense_mults": code.n_weights * feature_elems,
+        "unique_ratio": n_unique / max(n_nonzero, 1),
+        "density": n_nonzero / max(code.n_weights, 1),
+    }

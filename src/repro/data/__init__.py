@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, SyntheticTokenDataset,
+                                 make_batch_specs, host_batch_iterator)
+
+__all__ = ["DataConfig", "SyntheticTokenDataset", "make_batch_specs",
+           "host_batch_iterator"]

@@ -1,0 +1,4 @@
+from repro.kernels.codr_matmul.ops import codr_matmul
+from repro.kernels.codr_matmul.ref import codr_matmul_ref
+
+__all__ = ["codr_matmul", "codr_matmul_ref"]

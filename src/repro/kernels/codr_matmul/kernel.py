@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: CoDR unique-index compressed matmul.
+
+``y = x @ decode(packed, table) * scale``
+
+TPU adaptation of the CoDR PU (DESIGN.md §2): the compressed weight
+stream lives in HBM at ``bits/8`` bytes per weight; each grid step DMAs
+one packed block into VMEM, decodes it with vector shifts + a masked
+table reduction (the "Weight Decoder"), and feeds the dense tile to the
+MXU.  The output tile is **output-stationary** in a VMEM scratch
+accumulator across the K loop (the APE), and the activation tile is
+reused across the N loop (the shared Input RF) — the paper's loop
+ordering with HBM⇄VMEM standing in for SRAM⇄RF.
+
+Weight layout: ``packed[k, n*bits//32]`` uint32 words, ``table[2**bits]``
+sorted unique values (bf16/f32), per-tensor ``scale``.
+
+Grid: ``(M//bm, N//bn, K//bk)`` — K innermost so the accumulator stays
+resident; N next so the x-block is revisited (input semi-stationary);
+M outermost (outputs written exactly once — "fully output stationary").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_block(packed_blk: jax.Array, table: jax.Array, bits: int,
+                  bn: int) -> jax.Array:
+    """uint32 words → dense (bk, bn) weight block (VMEM, vector ops)."""
+    per_word = 32 // bits
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    idx = (packed_blk[:, :, None] >> shifts) & mask          # (bk, bn/pw, pw)
+    idx = idx.reshape(packed_blk.shape[0], bn).astype(jnp.int32)
+    # masked table reduction — 2**bits selects; sorted-unique table makes
+    # this the "Weight Decoder" (no gather needed on the TPU vector unit)
+    n_entries = table.shape[0]
+    out = jnp.zeros(idx.shape, dtype=jnp.float32)
+
+    def body(u, acc):
+        return acc + jnp.where(idx == u, table[u].astype(jnp.float32), 0.0)
+
+    return jax.lax.fori_loop(0, n_entries, body, out)
+
+
+def _codr_matmul_kernel(x_ref, packed_ref, table_ref, scale_ref, o_ref,
+                        acc_ref, *, bits: int, bn: int, n_k: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_blk = _decode_block(packed_ref[...], table_ref[...], bits, bn)
+    x_blk = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x_blk, w_blk,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * scale_ref[0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "n", "bm", "bn", "bk", "interpret"))
+def codr_matmul_pallas(x: jax.Array, packed: jax.Array, table: jax.Array,
+                       scale: jax.Array, *, bits: int, n: int,
+                       bm: int = 128, bn: int = 128, bk: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    m, k = x.shape
+    per_word = 32 // bits
+    assert packed.shape == (k, n // per_word), (packed.shape, (k, n // per_word))
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+
+    kernel = functools.partial(_codr_matmul_kernel, bits=bits, bn=bn,
+                               n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),      # x: reused over j
+            pl.BlockSpec((bk, bn // per_word), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((table.shape[0],), lambda i, j, kk: (0,)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, table, scale.reshape(1))

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the CoDR compressed matmul.
+
+On CPU (this container) the Pallas kernel runs in interpret mode; on a
+real TPU backend ``interpret=False`` compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.codr_linear import PackedWeight
+from repro.kernels.codr_matmul.kernel import codr_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def codr_matmul(x: jax.Array, w: PackedWeight, *, bm: int = 128,
+                bn: int = 128, bk: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """``y = x @ decode(w)`` with the decode fused into the matmul tiles."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return codr_matmul_pallas(
+        x, w.packed, w.table, w.scale.reshape(-1),
+        bits=w.bits, n=w.shape[1], bm=bm, bn=bn, bk=bk, interpret=interpret)

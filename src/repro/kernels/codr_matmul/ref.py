@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the CoDR compressed matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(packed: jax.Array, table: jax.Array, *, bits: int,
+               n: int) -> jax.Array:
+    per_word = 32 // bits
+    shifts = jnp.arange(per_word, dtype=jnp.uint32) * bits
+    mask = jnp.uint32((1 << bits) - 1)
+    idx = (packed[:, :, None] >> shifts[None, None, :]) & mask
+    idx = idx.reshape(packed.shape[0], n).astype(jnp.int32)
+    return jnp.take(table, idx, axis=0).astype(jnp.float32)
+
+
+def codr_matmul_ref(x: jax.Array, packed: jax.Array, table: jax.Array,
+                    scale: jax.Array, *, bits: int, n: int) -> jax.Array:
+    dense = decode_ref(packed, table, bits=bits, n=n)
+    y = jnp.dot(x.astype(jnp.float32), dense) * scale
+    return y.astype(x.dtype)

@@ -1,0 +1,26 @@
+"""jit'd wrapper: (B, S, H, D) GQA layout → fused flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 512,
+                           bk: int = 512,
+                           interpret: bool | None = None) -> jax.Array:
+    """q (B,S,Hq,D), k/v (B,S,Hkv,D) → (B,S,Hq,Dv); GQA by repeating kv
+    heads at the wrapper level (the kernel sees flat (B·H, S, D))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, hq, d = q.shape
+    _, sk, hkv, dv = v.shape
+    g = hq // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * hq, sk, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * hq, sk, dv)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out.reshape(b, hq, s, dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: naive softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    b, s, hq, d = q.shape
+    _, sk, hkv, dv = v.shape
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, sk), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, dv).astype(q.dtype)

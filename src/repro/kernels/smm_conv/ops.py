@@ -1,0 +1,62 @@
+"""Wrapper + offline operand packer for the SMM convolution kernel."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.smm import decode_index
+from repro.core.ucr import LayerCode
+from repro.kernels.smm_conv.kernel import smm_conv_pallas
+
+
+def pack_smm_operands(code: LayerCode, n_in: int
+                      ) -> tuple[np.ndarray, np.ndarray, dict]:
+    """UCR vectors → padded static-shape kernel operands.
+
+    Returns ``(deltas, entries, meta)``:
+      deltas  (m_tiles, N, U_max+1) float32 — Δs of sorted unique weights
+      entries (m_tiles, N, L_max, 4) int32 — (u, m_local, r, c) per
+              repetition; padding → (U_max, 0, 0, 0) = zero product row.
+    """
+    m = code.shape[0]
+    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
+    m_tiles = -(-m // code.t_m)
+    u_max = max((len(u.unique_vals) for u in code.ucr), default=1) or 1
+    l_max = max((len(u.indexes) for u in code.ucr), default=1) or 1
+
+    deltas = np.zeros((m_tiles, n_in, u_max + 1), dtype=np.float32)
+    entries = np.zeros((m_tiles, n_in, l_max, 4), dtype=np.int32)
+    entries[:, :, :, 0] = u_max                     # point at the zero row
+
+    for vi, u in enumerate(code.ucr):
+        mt, nn = vi // n_in, vi % n_in
+        vals = u.unique_vals.astype(np.float32)
+        deltas[mt, nn, : len(vals)] = np.diff(vals, prepend=0.0)
+        cursor = 0
+        li = 0
+        for ui, rep in enumerate(u.reps):
+            for idx in u.indexes[cursor : cursor + int(rep)]:
+                m_loc, r, c = decode_index(int(idx), (rk, ck))
+                entries[mt, nn, li] = (ui, m_loc, r, c)
+                li += 1
+            cursor += int(rep)
+    return deltas, entries, {"m_tiles": m_tiles, "t_m": code.t_m,
+                             "u_max": u_max, "l_max": l_max}
+
+
+def smm_conv(x: jax.Array, code: LayerCode, *,
+             interpret: bool | None = None) -> jax.Array:
+    """CoDR SMM convolution of ``x`` (N, RI, CI) with an encoded layer.
+    Returns pre-activation int-exact accumulations (float32), cropped to
+    the true output-channel count."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_in, ri, ci = x.shape
+    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
+    ro, co = ri - rk + 1, ci - ck + 1
+    deltas, entries, meta = pack_smm_operands(code, n_in)
+    out = smm_conv_pallas(jnp.asarray(x, jnp.float32), jnp.asarray(deltas),
+                          jnp.asarray(entries), t_m=meta["t_m"], ro=ro, co=co,
+                          interpret=interpret)
+    return out[: code.shape[0]]

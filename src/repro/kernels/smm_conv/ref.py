@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SMM convolution kernel: a dense int-exact
+convolution of the *decoded* weights (UCR/RLE decode must be lossless, so
+the kernel's reuse-exploiting schedule has to reproduce plain conv)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ucr import LayerCode, ucr_reconstruct
+
+
+def decode_dense_weights(code: LayerCode, n_in: int) -> np.ndarray:
+    """Rebuild the dense int8 weight tensor (M, N, RK, CK) from UCR vectors."""
+    m = code.shape[0]
+    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
+    m_tiles = -(-m // code.t_m)
+    w = np.zeros((m_tiles * code.t_m, n_in, rk, ck), dtype=np.int8)
+    for vi, u in enumerate(code.ucr):
+        mt, nn = vi // n_in, vi % n_in
+        vec = ucr_reconstruct(u).reshape(-1, rk, ck)   # (t_m, rk, ck)
+        w[mt * code.t_m : mt * code.t_m + vec.shape[0], nn] = vec
+    return w[:m]
+
+
+def smm_conv_ref(x: np.ndarray, code: LayerCode) -> jnp.ndarray:
+    """Dense conv oracle via jax.lax.conv (float32, exact for int8 ranges)."""
+    import jax.lax as lax
+    n_in = x.shape[0]
+    w = decode_dense_weights(code, n_in).astype(np.float32)
+    xf = jnp.asarray(x, jnp.float32)[None]                  # (1, N, RI, CI)
+    wf = jnp.asarray(w)                                     # (M, N, RK, CK)
+    out = lax.conv_general_dilated(
+        xf, wf, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0]

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_DRYRUN"] = "1"   # TPU-semantics lowering (no CPU upcasts)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init).  512 host devices back both the 16×16
+single-pod mesh and the 2×16×16 multi-pod mesh.
+
+Per cell we record:
+  * ``compiled.memory_analysis()``  — bytes/device (proves it fits HBM)
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the optimized HLO (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+outputs land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+import argparse      # noqa: E402
+import gzip          # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+import dataclasses   # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config  # noqa: E402
+from repro.launch.hlo_analysis import (collective_bytes_from_hlo,  # noqa: E402
+                                       flops_bytes_from_hlo)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import CellOptions, build_cell  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = OUT_DIR, *, options: CellOptions | None = None,
+             cfg_overrides: dict | None = None, tag: str = "") -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    skip_reason = applicable_shapes(cfg)[shape_name]
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "options": dataclasses.asdict(options) if options else None,
+              "cfg_overrides": cfg_overrides or None, "tag": tag}
+    if skip_reason != "run":
+        record["status"] = "SKIP"
+        record["reason"] = skip_reason
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    t0 = time.monotonic()
+    fn, arg_shapes, in_sh, _ = build_cell(cfg, shape, mesh, options=options)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo_text)
+    fb = flops_bytes_from_hlo(hlo_text)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    with gzip.open(os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.hlo.gz"),
+            "wt") as f:
+        f.write(hlo_text)
+    record.update({
+        "status": "OK",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "n_devices": mesh.size,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        # loop-aware per-device FLOPs/bytes (while bodies × trip count —
+        # xla's cost_analysis counts loop bodies once; see hlo_analysis)
+        "hlo_loop_aware": fb,
+        "collectives": coll,
+    })
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--opt", action="append", default=[],
+                    help="CellOptions k=v (serve_weight_dtype, cache_dtype)")
+    ap.add_argument("--cfg-opt", action="append", default=[],
+                    help="ModelConfig override k=v (decode_attn=dist, "
+                         "moe_decode_2d=true, block_causal=true, ...)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for output files (perf iteration name)")
+    args = ap.parse_args()
+
+    opt_kv = dict(kv.split("=", 1) for kv in args.opt)
+    options = CellOptions(**opt_kv) if opt_kv else None
+
+    def conv(v: str):
+        if v.lower() in ("true", "false"):
+            return v.lower() == "true"
+        for t in (int, float):
+            try:
+                return t(v)
+            except ValueError:
+                pass
+        return v
+
+    cfg_overrides = {k: conv(v) for k, v in
+                     (kv.split("=", 1) for kv in args.cfg_opt)} or None
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                tag = f"{arch}__{shape_name}__{mesh_name}" \
+                    + (f"__{args.tag}" if args.tag else "")
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = run_cell(arch, shape_name, mesh_name, args.out,
+                                   options=options,
+                                   cfg_overrides=cfg_overrides,
+                                   tag=args.tag)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "FAIL",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    gb = (rec["memory"]["peak_bytes"] or 0) / 1e9
+                    extra = (f" flops={rec['cost']['flops']:.3e}"
+                             f" peak={gb:.2f}GB"
+                             f" coll={rec['collectives']['total_bytes']:.3e}B"
+                             f" compile={rec['compile_s']}s")
+                elif status == "FAIL":
+                    extra = " " + rec["error"][:200]
+                print(f"[{status}] {tag}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,291 @@
+"""HLO parsing: collective byte accounting for the roofline's third term.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+optimized HLO text and sum the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+
+Two subtleties:
+
+* Bytes are **per participating device** (shapes in partitioned HLO are
+  already per-device): we take each collective's result shape — the
+  buffer a device materializes/moves — which is the quantity to divide
+  by per-chip link bandwidth.
+* ``lax.scan`` lowers to a ``while`` whose body appears ONCE in the text
+  but executes trip-count times.  We build the computation call graph
+  (while body/cond, call, conditional branches), extract loop trip
+  counts from the condition's comparison constant, and multiply nested
+  collective bytes by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[\w\[\]{},]+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_CALLEE_RE = re.compile(r"(?:to_apply|branch_computations)="
+                        r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_WHILE_RE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+),\s*"
+                       r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Computations start at column 0 with ``%name (...`` (or ``ENTRY``)
+    and end with a column-0 ``}``."""
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    entry: str | None = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        else:
+            if line.rstrip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line.strip())
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Loop trip count ≈ the largest scalar integer constant compared in
+    the condition (exact for lax.scan's canonical counter)."""
+    best = 1
+    for ln in cond_lines:
+        for m in _CONST_RE.finditer(ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_DOT_RE = re.compile(r"%([\w.\-]+)\s+=\s+((?:\([^)]*\))|(?:[\w\[\]{},]+))"
+                     r"\s+dot\((?:%?([\w.\-]+)(?:,\s*%?([\w.\-]+))?)?\)?")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s+=\s+"
+                     r"((?:\([^)]*\))|(?:[\w\[\]{},]+))\s+([\w\-]+)\(")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _elems(shape_str: str) -> int:
+    n = 1
+    for d in _dims(shape_str):
+        n *= d
+    return n
+
+
+def flops_bytes_from_hlo(hlo_text: str) -> dict:
+    """Loop-aware FLOP and HBM-byte accounting from optimized HLO.
+
+    ``compiled.cost_analysis()`` counts each while body ONCE regardless of
+    trip count, which under-counts scanned-layer models by n_layers×.  We
+    re-derive:
+
+      * FLOPs — 2·result_elems·K for every ``dot`` (K = product of the
+        lhs contracting dims), multiplied through the call graph (while
+        trip counts via backend_config known_trip_count).  Elementwise
+        FLOPs are ignored («1% for matmul-dominated graphs).
+      * bytes — for every *materializing* op (anything except nested
+        computations' internals; fusion internals stay in registers) the
+        result bytes + resolvable operand bytes, with the same
+        multipliers.  This approximates HBM traffic under the standard
+        "fusions materialize only their boundaries" model.
+    """
+    comps = _split_computations(hlo_text)
+    if "__entry__" not in comps:
+        comps = {"__entry__": hlo_text.splitlines()}
+
+    per_flops: dict[str, float] = {}
+    per_bytes: dict[str, float] = {}
+    callees: dict[str, list[tuple[str, int]]] = {}
+    fusion_comps: set[str] = set()
+
+    # first pass: per-computation shape tables
+    shape_tables: dict[str, dict[str, str]] = {}
+    for name, lines in comps.items():
+        table: dict[str, str] = {}
+        for ln in lines:
+            md = _DEF_RE.match(ln)
+            if md:
+                table[md.group(1)] = md.group(2)
+        shape_tables[name] = table
+
+    for name, lines in comps.items():
+        fl = 0.0
+        by = 0.0
+        calls: list[tuple[str, int]] = []
+        table = shape_tables[name]
+        for ln in lines:
+            mw = _WHILE_RE.search(ln)
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                mt = _TRIP_RE.search(ln)
+                tc = int(mt.group(1)) if mt \
+                    else _trip_count(comps.get(cond, []))
+                calls.append((body, tc))
+                calls.append((cond, tc))
+            else:
+                me = _CALLEE_RE.search(ln)
+                if me:
+                    for callee in re.split(r",\s*", me.group(1)):
+                        calls.append((callee.lstrip("%"), 1))
+                mcall = re.search(r"calls=%?([\w.\-]+)", ln)
+                if mcall:
+                    fusion_comps.add(mcall.group(1))
+                    calls.append((mcall.group(1), 1))
+            md = _DEF_RE.match(ln)
+            if not md:
+                continue
+            res_shape, op_kind = md.group(2), md.group(3)
+            if op_kind == "dot":
+                mc = _LHS_CONTRACT_RE.search(ln)
+                ops = re.search(r"dot\(%?([\w.\-]+)", ln)
+                k = 1
+                if mc and ops:
+                    lhs_shape = table.get(ops.group(1), "")
+                    ldims = _dims(lhs_shape)
+                    if mc.group(1):
+                        for d in mc.group(1).split(","):
+                            di = int(d)
+                            if di < len(ldims):
+                                k *= ldims[di]
+                fl += 2.0 * _elems(res_shape) * k
+            # bytes: result + operands (parameters & tuples excluded)
+            if op_kind in ("parameter", "tuple", "get-tuple-element",
+                           "constant", "bitcast", "while", "conditional"):
+                continue
+            mops = _OPERANDS_RE.search(ln[ln.find(op_kind + "("):])
+            opnames = (re.findall(r"%([\w.\-]+)", mops.group(1))
+                       if mops else [])
+            if op_kind == "dynamic-update-slice" and len(opnames) >= 2:
+                # in-place update: traffic = read+write of the slice only
+                b = 2 * _shape_bytes(table.get(opnames[1], ""))
+            elif op_kind in ("dynamic-slice", "gather"):
+                # reads only the sliced region ≈ result size
+                b = 2 * _shape_bytes(res_shape)
+            else:
+                b = _shape_bytes(res_shape)
+                for opname in opnames:
+                    b += _shape_bytes(table.get(opname, ""))
+            by += b
+        per_flops[name] = fl
+        per_bytes[name] = by
+        callees[name] = calls
+
+    total = {"flops": 0.0, "bytes": 0.0}
+    stack: list[str] = []
+
+    def visit(name: str, mult: float) -> None:
+        if name not in per_flops or name in stack:
+            return
+        stack.append(name)
+        total["flops"] += per_flops[name] * mult
+        if name not in fusion_comps:      # fusion internals ≠ HBM traffic
+            total["bytes"] += per_bytes[name] * mult
+        for callee, tc in callees[name]:
+            visit(callee, mult * tc)
+        stack.pop()
+
+    visit("__entry__", 1.0)
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    comps = _split_computations(hlo_text)
+    if "__entry__" not in comps:
+        # fall back: treat whole text as one computation
+        comps = {"__entry__": hlo_text.splitlines()}
+
+    # per-computation direct collective bytes + callees
+    direct: dict[str, dict[str, float]] = {}
+    counts: dict[str, dict[str, int]] = {}
+    callees: dict[str, list[tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        d = {k: 0.0 for k in _COLLECTIVES}
+        c = {k: 0 for k in _COLLECTIVES}
+        calls: list[tuple[str, int]] = []
+        for ln in lines:
+            mw = _WHILE_RE.search(ln)
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                mt = _TRIP_RE.search(ln)
+                tc = int(mt.group(1)) if mt \
+                    else _trip_count(comps.get(cond, []))
+                calls.append((body, tc))
+                calls.append((cond, tc))
+                continue
+            if "-done(" in ln:
+                continue
+            mc = _COLL_RE.search(ln)
+            if mc:
+                d[mc.group(2)] += _shape_bytes(mc.group(1))
+                c[mc.group(2)] += 1
+                continue
+            me = _CALLEE_RE.search(ln)
+            if me:
+                for callee in re.split(r",\s*", me.group(1)):
+                    calls.append((callee.lstrip("%"), 1))
+        direct[name] = d
+        counts[name] = c
+        callees[name] = calls
+
+    # propagate multipliers from entry through the call graph
+    total = {k: 0.0 for k in _COLLECTIVES}
+    total_counts = {k: 0 for k in _COLLECTIVES}
+    seen_stack: list[str] = []
+
+    def visit(name: str, mult: float) -> None:
+        if name not in direct or name in seen_stack:
+            return
+        seen_stack.append(name)
+        for k in _COLLECTIVES:
+            total[k] += direct[name][k] * mult
+            total_counts[k] += int(counts[name][k] * mult)
+        for callee, tc in callees[name]:
+            visit(callee, mult * tc)
+        seen_stack.pop()
+
+    visit("__entry__", 1.0)
+    return {"by_op_bytes": total, "by_op_count": total_counts,
+            "total_bytes": sum(total.values())}

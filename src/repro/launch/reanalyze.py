@@ -1,0 +1,35 @@
+"""Re-derive loop-aware flops/bytes + collective accounting for every
+saved dry-run HLO (no recompilation) and update the JSON records in
+place.  Used when the hlo_analysis cost model improves."""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch.hlo_analysis import (collective_bytes_from_hlo,
+                                       flops_bytes_from_hlo)
+
+
+def main(dryrun_dir: str) -> None:
+    for gz in sorted(glob.glob(os.path.join(dryrun_dir, "*.hlo.gz"))):
+        js = gz[: -len(".hlo.gz")] + ".json"
+        if not os.path.exists(js):
+            continue
+        with gzip.open(gz, "rt") as f:
+            txt = f.read()
+        with open(js) as f:
+            rec = json.load(f)
+        rec["hlo_loop_aware"] = flops_bytes_from_hlo(txt)
+        rec["collectives"] = collective_bytes_from_hlo(txt)
+        with open(js, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("updated", os.path.basename(js), flush=True)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else
+         os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "experiments", "dryrun"))

@@ -1,0 +1,92 @@
+"""Serving driver: batched prefill + decode with CoDR-compressed weights.
+
+Demonstrates the paper's technique as a first-class serving feature:
+``--codr`` converts every 2-D projection weight to the CoDR unique-index
+format (offline UCR + per-tensor parameter search), reports the measured
+compression (HBM bytes vs bf16), and serves with the decode-fused
+reference path (the Pallas kernel on TPU).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.serving import (codr_compress_params, codr_report,
+                                codr_serving_stats)
+from repro.models import get_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--codr", action="store_true",
+                    help="serve with CoDR-compressed weights")
+    ap.add_argument("--codr-unique", type=int, default=16,
+                    help="unique-weight budget per tensor (paper Fig. 6 U)")
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg)
+
+    if args.codr:
+        params, report = codr_compress_params(params, n_unique=args.codr_unique)
+        print(codr_report(report))
+
+    total = args.prompt_len + args.gen_len
+    tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.frontend or cfg.family == "encdec":
+        batch["prefix"] = jax.random.normal(
+            key, (args.batch, cfg.frontend_seq, cfg.d_model))
+
+    t0 = time.monotonic()
+    if cfg.family == "encdec":
+        logits, cache = api.prefill(params, batch, cfg)
+        # decoder cache: pad self-attn cache to total length
+        pad = total - cache["self"][0].shape[2] if False else 0  # noqa: F841
+    else:
+        logits, cache = api.prefill(params, batch, cfg)
+    t_prefill = time.monotonic() - t0
+
+    # greedy decode continuing from a fresh full-length cache: replay the
+    # prompt then generate (keeps cache shapes static)
+    cache = api.init_cache(cfg, args.batch, total)
+    step = jax.jit(lambda p, c, t, i: api.decode_step(p, c, t, i, cfg))
+    out_tokens = []
+    tok = tokens[:, 0]
+    t0 = time.monotonic()
+    for i in range(total - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        if i + 1 < args.prompt_len:
+            tok = tokens[:, i + 1]
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out_tokens.append(np.asarray(tok))
+    t_decode = time.monotonic() - t0
+    gen = np.stack(out_tokens, 1)
+    print(f"prefill {args.prompt_len} toks: {t_prefill*1e3:.1f} ms; "
+          f"decode {len(out_tokens)} steps: {t_decode*1e3:.1f} ms "
+          f"({t_decode/max(len(out_tokens),1)*1e3:.2f} ms/tok)")
+    print("sample generation (first row):", gen[0][:16])
+    stats = codr_serving_stats(cfg)
+    unit, scale = ("GB", 1.0) if stats["bf16_gb"] > 0.5 else ("MB", 1e3)
+    print(f"decode HBM weight traffic/token: "
+          f"bf16={stats['bf16_gb']*scale:.2f} {unit}, "
+          f"int8={stats['int8_gb']*scale:.2f} {unit}, "
+          f"codr(U={args.codr_unique})≈{stats['codr_gb']*scale:.2f} {unit} "
+          f"({stats['codr_bits_per_weight']:.2f} bits/weight)")
+
+
+if __name__ == "__main__":
+    main()

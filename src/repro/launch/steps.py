@@ -1,0 +1,296 @@
+"""Step functions + abstract state + shardings for every (arch × shape ×
+mesh) cell — shared by the dry-run, the trainer, and the server."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import get_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import ShardCtx, use_ctx
+from repro.sharding.rules import named_sharding_tree
+
+SERVE_DTYPE = jnp.bfloat16
+TRAIN_PARAM_DTYPE = jnp.bfloat16      # bf16 params + fp32 master in opt
+
+_WEIGHT_DTYPES = {"bf16": jnp.bfloat16, "int8": jnp.int8, "int4": jnp.int4}
+_CACHE_DTYPES = {"bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellOptions:
+    """§Perf levers applied at the lowering boundary (model-level levers
+    — decode_attn / moe_decode_2d / block_causal — live on ModelConfig).
+
+    ``serve_weight_dtype`` — storage dtype of ≥2-D serving weights
+    (int8 = weight-only quantization; int4 ≈ the CoDR U16 unique-index
+    pack: 4 bits/weight HBM traffic).  Scales are folded per-tensor and
+    are O(d_out) — negligible in the roofline; numerical fidelity of the
+    quantized path is validated by the codr_matmul kernel tests.
+    ``cache_dtype`` — KV-cache storage dtype.
+    """
+
+    serve_weight_dtype: str = "bf16"
+    cache_dtype: str = "bf16"
+
+    def tag(self) -> str:
+        parts = []
+        if self.serve_weight_dtype != "bf16":
+            parts.append(f"w{self.serve_weight_dtype}")
+        if self.cache_dtype != "bf16":
+            parts.append(f"c{self.cache_dtype}")
+        return "-".join(parts)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    axes = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch_size % total == 0:
+        return P(axes)
+    # fall back to the largest prefix of the axes that divides
+    for cut in range(len(axes) - 1, 0, -1):
+        total = int(np.prod([mesh.shape[a] for a in axes[:cut]]))
+        if batch_size % total == 0:
+            return P(axes[:cut])
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — never allocate)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train" or shape.kind == "prefill":
+        specs = {}
+        if cfg.family == "encdec":
+            # encoder consumes S frames; decoder gets a short target prefix
+            specs["prefix"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, min(s, 1024)),
+                                                   jnp.int32)
+        elif cfg.frontend:
+            fs = min(cfg.frontend_seq, s // 2)
+            specs["prefix"] = jax.ShapeDtypeStruct((b, fs, cfg.d_model),
+                                                   jnp.bfloat16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - fs), jnp.int32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    specs = input_specs(cfg, shape)
+    bspec = batch_spec(mesh, shape.global_batch)
+    out = {}
+    for k, v in specs.items():
+        if k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = NamedSharding(mesh, P(*(bspec + (None,) * (v.ndim - 1))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache shardings
+# ---------------------------------------------------------------------------
+
+def _cache_leaf_spec(shape: tuple[int, ...], mesh: Mesh, batch: int,
+                     stacked: bool) -> P:
+    """KV caches (B,S,H,D) / (B,S,C); recurrent states (B,...).
+    ``stacked`` leaves carry a leading (n_periods,) scan axis that must
+    stay unsharded (scan slices it per iteration)."""
+    bspec = batch_spec(mesh, batch)
+    baxes = bspec[0] if bspec else None
+    msize = mesh.shape.get("model", 1)
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    base = 1 if stacked else 0
+    dims = shape[base:]
+    if baxes is not None:
+        covered = int(np.prod([mesh.shape[a] for a in
+                               (baxes if isinstance(baxes, tuple)
+                                else (baxes,))]))
+        if dims and dims[0] % covered == 0 and covered > 1:
+            spec[base] = baxes
+    if len(dims) >= 3 and dims[1] > 1024:
+        # (B, S, ...) long-sequence cache: heads over model if they fit,
+        # else sequence over model
+        if len(dims) == 4 and dims[2] % msize == 0 and msize > 1:
+            spec[base + 2] = "model"
+        elif dims[1] % msize == 0 and msize > 1:
+            spec[base + 1] = "model"
+    elif len(dims) >= 2 and msize > 1:
+        # recurrent state: model on the widest trailing dim that divides
+        widest = int(np.argmax(dims[1:])) + 1
+        if dims[widest] % msize == 0:
+            spec[base + widest] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        stacked = pstr.startswith("stack")
+        out.append(NamedSharding(
+            mesh, _cache_leaf_spec(leaf.shape, mesh, batch, stacked)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# abstract params / optimizer state
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, dtype=TRAIN_PARAM_DTYPE):
+    """Abstract param tree.  Sub-byte / int dtypes apply only to ≥2-D
+    projection weights; norms/biases stay bf16."""
+    api = get_model(cfg)
+    shapes = jax.eval_shape(partial(api.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+
+    def leaf(s):
+        if jnp.issubdtype(dtype, jnp.integer) and s.ndim < 2:
+            return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        return jax.ShapeDtypeStruct(s.shape, dtype)
+
+    return jax.tree.map(leaf, shapes)
+
+
+def abstract_opt_state(params, opt_cfg: AdamWConfig):
+    return jax.eval_shape(partial(adamw_init, cfg=opt_cfg), params)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig,
+                   dtype=SERVE_DTYPE):
+    api = get_model(cfg)
+    return jax.eval_shape(
+        partial(api.init_cache, cfg, shape.global_batch, shape.seq_len,
+                dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    api = get_model(cfg)
+    ctx = ShardCtx(mesh)
+
+    def train_step(params, opt_state, batch):
+        with use_ctx(ctx):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.train_loss(p, batch, cfg))(params)
+            params, opt_state, metrics = adamw_update(
+                params, grads, opt_state, opt_cfg)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    api = get_model(cfg)
+    ctx = ShardCtx(mesh)
+
+    def prefill_step(params, batch):
+        with use_ctx(ctx):
+            logits, cache = api.prefill(params, batch, cfg)
+            return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh):
+    api = get_model(cfg)
+    ctx = ShardCtx(mesh)
+
+    def serve_step(params, cache, token, pos):
+        with use_ctx(ctx):
+            return api.decode_step(params, cache, token, pos, cfg)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# full cell assembly (used by dryrun / benchmarks)
+# ---------------------------------------------------------------------------
+
+def serve_param_fsdp(cfg: ModelConfig, mesh: Mesh,
+                     bytes_per_param: float = 2.0) -> bool:
+    """2-D-shard serving weights when a model-axis-only shard would not
+    fit HBM comfortably (see DESIGN.md §5).  Replicating over ``data``
+    (when it fits) removes the per-decode-step weight all-gathers —
+    weight compression (int8/int4 = the CoDR serving formats) widens the
+    set of models that qualify: the paper's trade, at cluster scale."""
+    msize = mesh.shape.get("model", 1)
+    bytes_per_chip = cfg.param_count() * bytes_per_param / max(msize, 1)
+    return bytes_per_chip > 8e9
+
+
+def build_cell(arch: str, shape: ShapeConfig, mesh: Mesh,
+               opt_cfg: AdamWConfig | None = None,
+               options: CellOptions | None = None):
+    """Returns (step_fn, arg_shapes, in_shardings, out_shardings_hint)."""
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    options = options or CellOptions()
+    serve_dtype = _WEIGHT_DTYPES[options.serve_weight_dtype]
+    cache_dtype = _CACHE_DTYPES[options.cache_dtype]
+    if shape.kind == "train":
+        params = abstract_params(cfg, TRAIN_PARAM_DTYPE)
+        opt_cfg = opt_cfg or AdamWConfig()
+        opt = abstract_opt_state(params, opt_cfg)
+        batch = input_specs(cfg, shape)
+        p_sh = named_sharding_tree(params, mesh, fsdp=True)
+        # moments/master shard like params
+        o_sh = {
+            "m": named_sharding_tree(opt["m"], mesh, fsdp=True),
+            "v": named_sharding_tree(opt["v"], mesh, fsdp=True),
+            "step": NamedSharding(mesh, P()),
+        }
+        if "master" in opt:
+            o_sh["master"] = named_sharding_tree(opt["master"], mesh,
+                                                 fsdp=True)
+        b_sh = batch_shardings(cfg, shape, mesh)
+        fn = make_train_step(cfg, mesh, opt_cfg)
+        return fn, (params, opt, batch), (p_sh, o_sh, b_sh), None
+
+    bpp = {"bf16": 2.0, "int8": 1.0, "int4": 0.5}[options.serve_weight_dtype]
+    fsdp = serve_param_fsdp(cfg, mesh, bpp)
+    params = abstract_params(cfg, serve_dtype)
+    moe2d = bool(cfg.moe_decode_2d and shape.kind == "decode")
+    p_sh = named_sharding_tree(params, mesh, fsdp=fsdp, moe2d=moe2d)
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        b_sh = batch_shardings(cfg, shape, mesh)
+        fn = make_prefill_step(cfg, mesh)
+        return fn, (params, batch), (p_sh, b_sh), None
+
+    # decode
+    cache = abstract_cache(cfg, shape, dtype=cache_dtype)
+    c_sh = cache_shardings(cache, mesh, shape.global_batch)
+    specs = input_specs(cfg, shape)
+    tok_sh = NamedSharding(mesh, batch_spec(mesh, shape.global_batch))
+    pos_sh = NamedSharding(mesh, P())
+    fn = make_decode_step(cfg, mesh)
+    return (fn, (params, cache, specs["token"], specs["pos"]),
+            (p_sh, c_sh, tok_sh, pos_sh), None)

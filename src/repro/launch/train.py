@@ -1,0 +1,77 @@
+"""End-to-end training driver.
+
+Two modes:
+  * ``--smoke``  — reduced config of the chosen arch on the host devices
+    (the quickstart path; runs real optimization steps on CPU).
+  * cluster mode — production mesh + FSDP/TP shardings; on this CPU
+    container use ``--dryrun`` to stop after lower+compile (the dry-run
+    proper lives in ``repro.launch.dryrun``).
+
+Fault tolerance: the loop checkpoints every N steps (atomic, async) and
+``--resume`` restores the latest checkpoint including the data cursor, so
+a killed run continues bit-exactly.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.data import DataConfig, host_batch_iterator
+from repro.models import get_model
+from repro.optim import AdamWConfig
+from repro.runtime import TrainLoop, TrainLoopConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="simulate a failure at this step (FT demo)")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch,
+                      frontend=cfg.frontend
+                      or ("audio" if cfg.family == "encdec" else None),
+                      frontend_seq=cfg.frontend_seq or args.seq,
+                      d_model=cfg.d_model)
+    loop = TrainLoop(
+        train_loss_fn=lambda p, b: api.train_loss(p, b, cfg),
+        params=params,
+        batch_iter=host_batch_iterator(dcfg),
+        opt_cfg=AdamWConfig(lr=args.lr, use_master=False),
+        loop_cfg=TrainLoopConfig(total_steps=args.steps,
+                                 checkpoint_every=max(args.steps // 4, 1),
+                                 ckpt_dir=args.ckpt_dir,
+                                 peak_lr=args.lr,
+                                 fail_at_step=args.fail_at))
+    if args.resume:
+        start = loop.try_restore()
+        print(f"resumed from step {start}")
+    hist = loop.run()
+    first = np.mean([h["loss"] for h in hist[:10]])
+    last = np.mean([h["loss"] for h in hist[-10:]])
+    print(f"steps={len(hist)} loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

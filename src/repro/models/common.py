@@ -1,0 +1,118 @@
+"""Shared model building blocks (pure JAX, dict-pytree params)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import maybe_constrain
+
+DEFAULT_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32      # master params; cast to compute dtype at use
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None,
+               dtype=PARAM_DTYPE) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=PARAM_DTYPE) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None
+           ) -> jax.Array:
+    y = jnp.dot(x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+             f32: bool = True) -> jax.Array:
+    if f32:
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+        return (y * w.astype(jnp.float32)).astype(x.dtype)
+    # §Perf lever: f32 only in the (…,1) reduction accumulators — no
+    # (B,S,D)-sized f32 tensor is ever materialized, forward or backward
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                   dtype=jnp.float32)
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * r * w.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5, f32: bool = True) -> jax.Array:
+    if f32:
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * w.astype(jnp.float32)
+                + b.astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                   dtype=jnp.float32) - jnp.square(mu)
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return ((x - mu.astype(x.dtype)) * r * w.astype(x.dtype)
+            + b.astype(x.dtype))
+
+
+def norm_apply(x, p, kind: str, f32: bool = True):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["w"], f32=f32)
+    return layer_norm(x, p["w"], p["b"], f32=f32)
+
+
+def norm_init(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), PARAM_DTYPE)}
+    return {"w": jnp.ones((d,), PARAM_DTYPE), "b": jnp.zeros((d,), PARAM_DTYPE)}
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (B, S, H, D) — rotate the full head dim."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array | None = None) -> jax.Array:
+    """Token-mean cross entropy; logits (.., V) f32-stable."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def constrain_tokens(x: jax.Array) -> jax.Array:
+    """(B, S, D) activations: batch over data axes."""
+    return maybe_constrain(x, "batch", None, None)

@@ -1,0 +1,176 @@
+"""Encoder–decoder transformer (SeamlessM4T backbone).
+
+The audio frontend is a stub per the assignment spec: ``input_specs()``
+feeds precomputed frame embeddings (B, S_frames, d) straight into the
+encoder.  Encoder layers are bidirectional GQA; decoder layers are causal
+self-attention + cross-attention into the cached encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import (DEFAULT_DTYPE, constrain_tokens, dense_init,
+                                 embed_init, linear, norm_apply, norm_init,
+                                 softmax_xent)
+
+
+def _init_enc_layer(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": norm_init(cfg.d_model, cfg.norm_type),
+            "mixer": attn.gqa_init(k1, cfg),
+            "norm2": norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": moe_mod.mlp_init(k2, cfg.d_model, cfg.d_ff, gated=False)}
+
+
+def _init_dec_layer(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": norm_init(cfg.d_model, cfg.norm_type),
+            "self_attn": attn.gqa_init(k1, cfg),
+            "norm_x": norm_init(cfg.d_model, cfg.norm_type),
+            "cross_attn": attn.gqa_init(k2, cfg),
+            "norm2": norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": moe_mod.mlp_init(k3, cfg.d_model, cfg.d_ff, gated=False)}
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "enc_stack": jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+            jax.random.split(ks[1], cfg.n_encoder_layers)),
+        "dec_stack": jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+            jax.random.split(ks[2], cfg.n_periods)),
+        "enc_norm": norm_init(cfg.d_model, cfg.norm_type),
+        "final_norm": norm_init(cfg.d_model, cfg.norm_type),
+        "out_embed": embed_init(ks[3], cfg.vocab_size, cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames (B, S_enc, d) precomputed embeddings → encoder output."""
+    x = frames.astype(DEFAULT_DTYPE)
+    x = constrain_tokens(x)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, lp):
+        h = norm_apply(xc, lp["norm1"], cfg.norm_type, f32=cfg.norm_f32)
+        out, _ = attn.gqa_forward(lp["mixer"], h, cfg, positions, causal=False)
+        xc = xc + out
+        h = norm_apply(xc, lp["norm2"], cfg.norm_type, f32=cfg.norm_f32)
+        xc = xc + moe_mod.mlp_forward(lp["mlp"], h, cfg.act)
+        return constrain_tokens(xc), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    return norm_apply(x, params["enc_norm"], cfg.norm_type, f32=cfg.norm_f32)
+
+
+def _dec_block(lp, x, cfg, mode, cache, pos, positions, enc_out, enc_kv):
+    # self attention
+    h = norm_apply(x, lp["norm1"], cfg.norm_type, f32=cfg.norm_f32)
+    if mode == "decode":
+        out, new_self = attn.gqa_decode(lp["self_attn"], h, cfg,
+                                        cache, pos)
+    else:
+        out, new_self = attn.gqa_forward(lp["self_attn"], h, cfg, positions)
+    x = x + out
+    # cross attention into encoder output
+    h = norm_apply(x, lp["norm_x"], cfg.norm_type, f32=cfg.norm_f32)
+    b, s = h.shape[:2]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(h, lp["cross_attn"]["q_proj"],
+               lp["cross_attn"].get("q_bias")).reshape(b, s, hq, hd)
+    if enc_kv is None:
+        se = enc_out.shape[1]
+        k = linear(enc_out, lp["cross_attn"]["k_proj"]).reshape(b, se, hkv, hd)
+        v = linear(enc_out, lp["cross_attn"]["v_proj"]).reshape(b, se, hkv, hd)
+    else:
+        k, v = enc_kv
+    if mode == "decode":
+        out = attn.decode_attention(q, k, v, k.shape[1] - 1)
+    else:
+        out = attn.flash_attention(q, k, v, causal=False,
+                                   q_chunk=cfg.attn_q_chunk,
+                                   kv_chunk=cfg.attn_kv_chunk)
+    out = linear(out.reshape(b, s, -1), lp["cross_attn"]["o_proj"])
+    x = x + out
+    h = norm_apply(x, lp["norm2"], cfg.norm_type, f32=cfg.norm_f32)
+    x = x + moe_mod.mlp_forward(lp["mlp"], h, cfg.act)
+    return constrain_tokens(x), new_self, (k, v)
+
+
+def decode_forward(params, tokens, cfg, enc_out=None, *, mode="train",
+                   cache=None, pos=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(DEFAULT_DTYPE)
+    x = constrain_tokens(x)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if mode == "train":
+        def body(xc, lp):
+            xc, _, _ = _dec_block(lp, xc, cfg, mode, None, pos, positions,
+                                  enc_out, None)
+            return xc, None
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["dec_stack"])
+        new_cache = None
+    elif mode == "prefill":
+        def body(xc, lp):
+            xc, self_kv, cross_kv = _dec_block(lp, xc, cfg, mode, None, pos,
+                                               positions, enc_out, None)
+            return xc, {"self": self_kv, "cross": cross_kv}
+        x, new_cache = jax.lax.scan(body, x, params["dec_stack"])
+    else:
+        def body(xc, xs):
+            lp, c = xs
+            xc, self_kv, _ = _dec_block(lp, xc, cfg, mode, c["self"], pos,
+                                        positions, None, c["cross"])
+            return xc, {"self": self_kv, "cross": c["cross"]}
+        x, new_cache = jax.lax.scan(body, x, (params["dec_stack"], cache))
+
+    x = norm_apply(x, params["final_norm"], cfg.norm_type, f32=cfg.norm_f32)
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = jnp.dot(x, params["out_embed"].T.astype(x.dtype))
+    return logits, new_cache
+
+
+def train_loss(params, batch, cfg):
+    enc_out = encode(params, batch["prefix"], cfg)
+    logits, _ = decode_forward(params, batch["tokens"], cfg, enc_out,
+                               mode="train")
+    mask = batch.get("mask")
+    return softmax_xent(logits[:, :-1], batch["tokens"][:, 1:],
+                        mask[:, 1:] if mask is not None else None)
+
+
+def prefill(params, frames, tokens, cfg):
+    """Encode frames, run decoder prefill. Returns (last-token logits,
+    cache with per-layer self KV + cross KV)."""
+    enc_out = encode(params, frames, cfg)
+    return decode_forward(params, tokens, cfg, enc_out, mode="prefill")
+
+
+def decode_step(params, cache, token, pos, cfg):
+    logits, cache = decode_forward(params, token[:, None], cfg, None,
+                                   mode="decode", cache=cache, pos=pos)
+    return logits[:, 0], cache
+
+
+def init_cache(cfg, batch: int, seq: int, enc_seq: int, dtype=DEFAULT_DTYPE):
+    """Decoder cache: self-attn KV (B, seq) + cross KV (B, enc_seq),
+    stacked over decoder layers."""
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    layer = {
+        "self": (jnp.zeros((batch, seq, hkv, hd), dtype),
+                 jnp.zeros((batch, seq, hkv, hd), dtype)),
+        "cross": (jnp.zeros((batch, enc_seq, hkv, hd), dtype),
+                  jnp.zeros((batch, enc_seq, hkv, hd), dtype)),
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape),
+        layer)

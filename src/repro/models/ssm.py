@@ -1,0 +1,268 @@
+"""State-space / recurrent mixers: Mamba (Jamba's SSM layers) and the
+xLSTM sLSTM/mLSTM blocks.
+
+Mamba's selective scan is implemented chunkwise: an outer ``lax.scan``
+over sequence chunks carries the (B, d_inner, N) state; within a chunk a
+``lax.associative_scan`` gives log-depth parallelism without ever
+materializing the full (B, S, d_inner, N) decay tensor (only one chunk is
+live).  sLSTM/mLSTM use stabilized exponential gating per the xLSTM paper
+and scan sequentially (their recurrent matrix / matrix memory is the
+non-parallelizable part; chunkwise-parallel mLSTM is a §Perf candidate).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear
+
+# ---------------------------------------------------------------------------
+# Mamba (S6) block
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_d_conv, d_in),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * n),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_in, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq: x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _ssm_scan_chunked(a: jax.Array, b: jax.Array, h0: jax.Array,
+                      chunk: int) -> jax.Array:
+    """h_t = a_t ⊙ h_{t-1} + b_t over axis 1; a/b (B,S,d,N), h0 (B,d,N).
+    Returns all h_t (B,S,d,N)."""
+    bsz, s, d, n = a.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    ac = a.reshape(bsz, s // chunk, chunk, d, n).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(bsz, s // chunk, chunk, d, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    def step(h, ab):
+        aa, bb = ab                                    # (B, chunk, d, N)
+        pa, pb = jax.lax.associative_scan(combine, (aa, bb), axis=1)
+        hs = pa * h[:, None] + pb
+        return hs[:, -1], hs
+
+    _, hs = jax.lax.scan(step, h0, (ac, bc))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(bsz, s, d, n)
+
+
+def mamba_forward(p, x, cfg, *, chunk: int = 256):
+    """x (B,S,d) → (y (B,S,d), state (conv_tail, h_last))."""
+    bsz, s, d = x.shape
+    n = cfg.ssm_d_state
+    d_in = cfg.ssm_expand * d
+    dt_rank = max(1, math.ceil(d / 16))
+    xz = linear(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_conv = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    xdb = linear(xi_conv, p["x_proj"])
+    dt = jax.nn.softplus(
+        linear(xdb[..., :dt_rank], p["dt_proj"]) + p["dt_bias"].astype(x.dtype))
+    bmat = xdb[..., dt_rank : dt_rank + n].astype(jnp.float32)
+    cmat = xdb[..., dt_rank + n :].astype(jnp.float32)
+    a_cont = -jnp.exp(p["A_log"])                          # (d_in, N)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * a_cont[None, None])   # (B,S,d_in,N)
+    drive = (dtf * xi_conv.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+    h0 = jnp.zeros((bsz, d_in, n), jnp.float32)
+    hs = _ssm_scan_chunked(decay, drive, h0, chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat)
+    y = (y + p["D"].astype(jnp.float32) * xi_conv.astype(jnp.float32))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])
+    conv_tail = xi[:, -(cfg.ssm_d_conv - 1):]              # raw pre-conv tail
+    return out, (conv_tail, hs[:, -1])
+
+
+def mamba_decode(p, x, cfg, state):
+    """Single-token step. state = (conv_tail (B,K-1,d_in), h (B,d_in,N))."""
+    conv_tail, h = state
+    bsz, _, d = x.shape
+    n = cfg.ssm_d_state
+    dt_rank = max(1, math.ceil(d / 16))
+    xz = linear(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                      # (B,1,d_in)
+    window = jnp.concatenate([conv_tail.astype(xi.dtype), xi], axis=1)
+    conv = (window * p["conv_w"].astype(xi.dtype)).sum(axis=1, keepdims=True) \
+        + p["conv_b"].astype(xi.dtype)
+    xi_conv = jax.nn.silu(conv)
+    xdb = linear(xi_conv, p["x_proj"])
+    dt = jax.nn.softplus(
+        linear(xdb[..., :dt_rank], p["dt_proj"]) + p["dt_bias"].astype(x.dtype))
+    bmat = xdb[..., dt_rank : dt_rank + n].astype(jnp.float32)
+    cmat = xdb[..., dt_rank + n :].astype(jnp.float32)
+    a_cont = -jnp.exp(p["A_log"])
+    dtf = dt[:, 0].astype(jnp.float32)                     # (B,d_in)
+    decay = jnp.exp(dtf[..., None] * a_cont[None])
+    drive = (dtf * xi_conv[:, 0].astype(jnp.float32))[..., None] \
+        * bmat[:, 0, None, :]
+    h = decay * h + drive
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+    y = y + p["D"].astype(jnp.float32) * xi_conv.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])
+    return out, (window[:, 1:], h)
+
+
+def mamba_state_init(cfg, batch: int, dtype=jnp.bfloat16):
+    d_in = cfg.ssm_expand * cfg.d_model
+    return (jnp.zeros((batch, cfg.ssm_d_conv - 1, d_in), dtype),
+            jnp.zeros((batch, d_in, cfg.ssm_d_state), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory, recurrent mix)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    d_up = 2 * d
+    dk = d_up // h
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_up),
+        "q_proj": dense_init(ks[1], d_up, d_up),
+        "k_proj": dense_init(ks[2], d_up, d_up),
+        "v_proj": dense_init(ks[3], d_up, d_up),
+        "if_proj": dense_init(ks[4], d_up, 2 * h, scale=0.02),
+        "if_bias": jnp.concatenate([jnp.zeros((h,)), jnp.ones((h,)) * 3.0]
+                                   ).astype(jnp.float32),
+        "out_proj": dense_init(ks[5], d_up, d),
+    }
+
+
+def _mlstm_step(carry, qkvif):
+    c, n, m = carry                        # C (B,H,dk,dv), n (B,H,dk), m (B,H)
+    q, k, v, ig, fg = qkvif                # q/k (B,H,dk), v (B,H,dv)
+    m_new = jnp.maximum(fg + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(fg + m - m_new)
+    c = f_p[..., None, None] * c + i_p[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h_out = num / den[..., None]
+    return (c, n, m_new), h_out
+
+
+def mlstm_forward(p, x, cfg, state=None):
+    """x (B,S,d) → (out, state). Sequential scan over S."""
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    d_up = 2 * d
+    dk = d_up // h
+    up = linear(x, p["up_proj"])
+    xin, z = jnp.split(up, 2, axis=-1)                    # (B,S,d_up)
+    q = linear(xin, p["q_proj"]).reshape(bsz, s, h, dk) / math.sqrt(dk)
+    k = linear(xin, p["k_proj"]).reshape(bsz, s, h, dk)
+    v = linear(xin, p["v_proj"]).reshape(bsz, s, h, dk)
+    ifg = linear(xin, p["if_proj"]).astype(jnp.float32) \
+        + p["if_bias"].astype(jnp.float32)
+    ig, fg = ifg[..., :h], jax.nn.log_sigmoid(ifg[..., h:])
+    if state is None:
+        state = mlstm_state_init(cfg, bsz)
+    qs = q.transpose(1, 0, 2, 3).astype(jnp.float32)
+    ks_ = k.transpose(1, 0, 2, 3).astype(jnp.float32)
+    vs = v.transpose(1, 0, 2, 3).astype(jnp.float32)
+    igs, fgs = ig.transpose(1, 0, 2), fg.transpose(1, 0, 2)
+    state, hs = jax.lax.scan(_mlstm_step, state, (qs, ks_, vs, igs, fgs))
+    hs = hs.transpose(1, 0, 2, 3).reshape(bsz, s, d_up).astype(x.dtype)
+    hs = hs * jax.nn.silu(z)
+    return linear(hs, p["out_proj"]), state
+
+
+def mlstm_state_init(cfg, batch: int):
+    h = cfg.n_heads
+    dk = 2 * cfg.d_model // h
+    return (jnp.zeros((batch, h, dk, dk), jnp.float32),
+            jnp.zeros((batch, h, dk), jnp.float32),
+            jnp.full((batch, h), -1e30, jnp.float32))
+
+
+def slstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_proj": dense_init(ks[0], d, 4 * d),
+        "r_proj": jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+        / math.sqrt(dh),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "out_proj": dense_init(ks[2], d, d),
+    }
+
+
+def _slstm_step(p, cfg, carry, wx_t):
+    c, n, hprev, m = carry                   # each (B, d) / m (B, H)
+    bsz, d = c.shape
+    h = cfg.n_heads
+    dh = d // h
+    hh = hprev.reshape(bsz, h, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r_proj"]).reshape(bsz, 4 * d)
+    raw = (wx_t + rec).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(raw, 4, axis=-1)
+    ith = it.reshape(bsz, h, dh)
+    fth = jax.nn.log_sigmoid(ft).reshape(bsz, h, dh)
+    m_new = jnp.maximum(fth.mean(-1) + m, ith.mean(-1))      # per-head stabilizer
+    i_p = jnp.exp(ith - m_new[..., None]).reshape(bsz, d)
+    f_p = jnp.exp(fth + (m - m_new)[..., None]).reshape(bsz, d)
+    c_new = f_p * c + i_p * jnp.tanh(zt)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p, x, cfg, state=None):
+    bsz, s, d = x.shape
+    wx = linear(x, p["w_proj"]) + p["bias"].astype(x.dtype)
+    if state is None:
+        state = slstm_state_init(cfg, bsz)
+
+    def step(carry, wx_t):
+        return _slstm_step(p, cfg, carry, wx_t)
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)
+    return linear(hs, p["out_proj"]), state
+
+
+def slstm_state_init(cfg, batch: int):
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.full((batch, cfg.n_heads), -1e30, jnp.float32))

@@ -1,0 +1,72 @@
+"""AdamW with optional fp32 master weights (mixed-precision training:
+bf16 params in the forward, fp32 master + moments in the optimizer state,
+all sharded like the params — ZeRO-style under the FSDP axis)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    use_master: bool = True        # keep fp32 master copy of bf16 params
+
+
+def adamw_init(params, cfg: AdamWConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.use_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr: jax.Array | float | None = None):
+    """Returns (new_params, new_state, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state["v"], grads)
+    masters = state.get("master", params)
+
+    def upd(p32, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        return (p32.astype(jnp.float32)
+                - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                        + cfg.weight_decay * p32.astype(jnp.float32)))
+
+    new_master = jax.tree.map(upd, masters, new_m, new_v)
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.use_master:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm, "step": step}

@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, *, peak_lr: float, warmup_steps: int):
+    return peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup_steps: int,
+                    total_steps: int, final_frac: float = 0.1):
+    warm = linear_warmup(step, peak_lr=peak_lr, warmup_steps=warmup_steps)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

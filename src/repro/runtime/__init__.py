@@ -1,0 +1,6 @@
+from repro.runtime.loop import TrainLoop, TrainLoopConfig
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.elastic import ElasticMeshManager, HostSet
+
+__all__ = ["TrainLoop", "TrainLoopConfig", "StragglerMonitor",
+           "ElasticMeshManager", "HostSet"]

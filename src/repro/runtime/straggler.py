@@ -1,0 +1,60 @@
+"""Straggler detection & mitigation.
+
+On a 1000+-node cluster the slowest host sets the step time (synchronous
+SPMD).  The monitor keeps an EWMA of per-host step-report times; hosts
+whose reported time exceeds ``threshold ×`` the fleet median for
+``patience`` consecutive steps are flagged.  Mitigation is a policy
+callback — the default recommendation ladder is:
+
+  1. ``rebalance``  — shrink the flagged host's data shard (batch
+     re-split, cheap, reversible),
+  2. ``evict``      — hand the host to :class:`ElasticMeshManager` for a
+     re-mesh without it (checkpoint → re-shard → resume).
+
+On this single-host container the monitor is exercised by the tests with
+synthetic timing streams; the interfaces are what a real deployment wires
+to its control plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ewma_alpha: float = 0.2
+    threshold: float = 1.5         # × fleet median
+    patience: int = 5              # consecutive flagged steps before action
+    evict_threshold: float = 3.0   # × median → recommend eviction
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, cfg: StragglerConfig | None = None):
+        self.cfg = cfg or StragglerConfig()
+        self.n_hosts = n_hosts
+        self.ewma = np.zeros(n_hosts)
+        self.flag_streak = np.zeros(n_hosts, dtype=np.int64)
+        self.initialized = False
+
+    def observe(self, host_step_times: np.ndarray) -> dict:
+        """Feed one step's per-host wall times; returns actions."""
+        t = np.asarray(host_step_times, dtype=np.float64)
+        if not self.initialized:
+            self.ewma[:] = t
+            self.initialized = True
+        else:
+            a = self.cfg.ewma_alpha
+            self.ewma = (1 - a) * self.ewma + a * t
+        med = np.median(self.ewma)
+        ratio = self.ewma / max(med, 1e-12)
+        flagged = ratio > self.cfg.threshold
+        self.flag_streak = np.where(flagged, self.flag_streak + 1, 0)
+        actions = {}
+        for h in np.nonzero(self.flag_streak >= self.cfg.patience)[0]:
+            if ratio[h] > self.cfg.evict_threshold:
+                actions[int(h)] = "evict"
+            else:
+                actions[int(h)] = "rebalance"
+        return {"median": float(med), "ratio": ratio, "actions": actions}

@@ -1,0 +1,5 @@
+from repro.sharding.rules import (ShardCtx, current_ctx, maybe_constrain,
+                                  param_spec, set_ctx, use_ctx)
+
+__all__ = ["ShardCtx", "current_ctx", "maybe_constrain", "param_spec",
+           "set_ctx", "use_ctx"]

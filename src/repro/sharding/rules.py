@@ -1,0 +1,163 @@
+"""Sharding rules: one place that knows the mesh axes.
+
+Axes:
+  * ``pod``   — outer pure-DP axis (multi-pod); gradients cross DCI once.
+  * ``data``  — FSDP axis: batch + parameter/optimizer-state sharding.
+  * ``model`` — TP axis: attention heads / FFN hidden / MoE experts / vocab.
+
+Models are mesh-agnostic: layers call :func:`maybe_constrain` with logical
+specs; outside a mesh context it is the identity, so the same code runs in
+single-device smoke tests and under the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    mesh: Mesh
+    batch_axes: tuple[str, ...] = ("pod", "data")   # axes present → used
+    fsdp_axis: str = "data"
+    model_axis: str = "model"
+
+    @property
+    def batch_spec(self):
+        axes = tuple(a for a in self.batch_axes if a in self.mesh.axis_names)
+        return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def axis_size(self, name: str) -> int:
+        if name in self.mesh.axis_names:
+            return self.mesh.shape[name]
+        return 1
+
+
+def set_ctx(ctx: ShardCtx | None) -> None:
+    _STATE.ctx = ctx
+
+
+def current_ctx() -> ShardCtx | None:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: ShardCtx | None):
+    prev = current_ctx()
+    set_ctx(ctx)
+    try:
+        yield ctx
+    finally:
+        set_ctx(prev)
+
+
+def maybe_constrain(x: jax.Array, *spec) -> jax.Array:
+    """``with_sharding_constraint`` if a mesh context is active, else id.
+
+    ``spec`` uses logical names: 'batch' → the batch axes, 'model'/'data'
+    → those mesh axes, None → replicated.
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    resolved = []
+    for s in spec:
+        if s == "batch":
+            resolved.append(ctx.batch_spec)
+        elif s in (None,):
+            resolved.append(None)
+        elif isinstance(s, str) and s in ctx.mesh.axis_names:
+            resolved.append(s)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules (path-pattern → PartitionSpec)
+# ---------------------------------------------------------------------------
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+               *, fsdp: bool = True, moe2d: bool = False) -> P:
+    """PartitionSpec for a parameter by its pytree path.
+
+    Conventions (DESIGN.md §5): 2-D weights ``(d_in, d_out)`` are
+    column-parallel (out over ``model``) when they *enter* a parallel
+    region (qkv/up/gate), row-parallel (in over ``model``) when they
+    *leave* one (o_proj/down).  FSDP shards the complementary dimension
+    over ``data``.  Stacked-layer leading axes (scan) are never sharded.
+    MoE expert stacks shard experts over ``model``.  Embeddings shard
+    vocab over ``model``.  Any dim not divisible by its axis is left
+    unsharded (GSPMD padding is wasteful at these sizes — be explicit).
+    """
+    dsize = mesh.shape.get("data", 1)
+    msize = mesh.shape.get("model", 1)
+    name = path.split("/")[-1]
+    stacked = "stack" in path          # leading (n_periods, ...) axis
+
+    def fits(dim: int, size: int) -> bool:
+        return size > 1 and dim % size == 0
+
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    base = 1 if stacked else 0         # skip the scan axis
+
+    def setax(i: int, axis: str, size: int):
+        if 0 <= i < ndim and spec[i] is None and fits(shape[i], size):
+            spec[i] = axis
+
+    if name in ("embed", "out_embed", "lm_head"):
+        # (V, D): vocab over model, D over data (FSDP)
+        setax(base, "model", msize)
+        if fsdp:
+            setax(base + 1, "data", dsize)
+    elif name in ("w_experts_in", "w_experts_gate", "w_experts_out"):
+        # (E, d_in, d_out): experts over model; FSDP over data on d_in.
+        # moe2d (decode serving): shard the expert-FFN hidden dim over
+        # data instead, matching the _moe_2d shard_map in_specs so the
+        # weights enter with zero resharding collectives.
+        setax(base, "model", msize)
+        if moe2d and name in ("w_experts_in", "w_experts_gate"):
+            setax(base + 2, "data", dsize)
+        elif fsdp or moe2d:
+            setax(base + 1, "data", dsize)
+    elif name.endswith(("q_proj", "k_proj", "v_proj", "up_proj", "gate_proj",
+                        "in_proj", "qkv_proj", "kv_a_proj", "q_a_proj",
+                        "q_b_proj", "kv_b_proj")):
+        # column parallel (d_in, d_out): out over model
+        setax(base + 1, "model", msize)
+        if fsdp:
+            setax(base, "data", dsize)
+    elif name.endswith(("o_proj", "down_proj", "out_proj")):
+        # row parallel: in over model
+        setax(base, "model", msize)
+        if fsdp:
+            setax(base + 1, "data", dsize)
+    elif ndim - base >= 2:
+        # generic 2-D: FSDP over data on d_in
+        if fsdp:
+            setax(base, "data", dsize)
+    else:
+        # 1-D (norms, biases): replicate
+        pass
+    return P(*spec)
+
+
+def named_sharding_tree(params, mesh: Mesh, paths_and_shapes=None,
+                        *, fsdp: bool = True, moe2d: bool = False):
+    """Map a params pytree (or eval_shape result) to NamedShardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append(NamedSharding(mesh, param_spec(pstr, leaf.shape, mesh,
+                                                  fsdp=fsdp, moe2d=moe2d)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — the
+smoke tests must see the real single CPU device (the 512-device override
+belongs exclusively to repro.launch.dryrun)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,60 @@
+"""Data pipeline: determinism, sharding, restart-exactness."""
+import numpy as np
+
+from repro.data import DataConfig, SyntheticTokenDataset, host_batch_iterator
+
+
+def test_batches_deterministic_per_step():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=4)
+    ds1, ds2 = SyntheticTokenDataset(cfg), SyntheticTokenDataset(cfg)
+    for step in (0, 5, 17):
+        np.testing.assert_array_equal(ds1.batch(step)["tokens"],
+                                      ds2.batch(step)["tokens"])
+
+
+def test_batches_differ_across_steps_and_shards():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=4)
+    ds = SyntheticTokenDataset(cfg)
+    assert not np.array_equal(ds.batch(0)["tokens"], ds.batch(1)["tokens"])
+    c2 = DataConfig(vocab_size=1000, seq_len=64, global_batch=8,
+                    n_shards=2, shard_id=1)
+    assert not np.array_equal(ds.batch(0)["tokens"],
+                              SyntheticTokenDataset(c2).batch(0)["tokens"])
+
+
+def test_shard_batch_split():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8, n_shards=4)
+    ds = SyntheticTokenDataset(cfg)
+    assert ds.batch(0)["tokens"].shape == (2, 16)
+
+
+def test_iterator_resume_matches():
+    """Restarting from a cursor reproduces the same stream (the property
+    checkpoint/restore relies on)."""
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
+    it1 = host_batch_iterator(cfg)
+    seq1 = [next(it1) for _ in range(6)]
+    it2 = host_batch_iterator(cfg, start_step=3)
+    for (s1, b1), (s2, b2) in zip(seq1[3:], it2):
+        assert s1 == s2
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_motifs_make_data_learnable():
+    """Repeated motifs → bigram statistics far from uniform."""
+    cfg = DataConfig(vocab_size=64, seq_len=256, global_batch=8,
+                     motif_prob=0.9)
+    toks = SyntheticTokenDataset(cfg).batch(0)["tokens"]
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs[(a, b)] = pairs.get((a, b), 0) + 1
+    top = max(pairs.values()) / sum(pairs.values())
+    assert top > 2.0 / 64 ** 2 * 10   # heavily repeated pairs exist
+
+
+def test_frontend_prefix_shapes():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2,
+                     frontend="vision", frontend_seq=8, d_model=32)
+    b = SyntheticTokenDataset(cfg).batch(0)
+    assert b["prefix"].shape == (2, 8, 32)

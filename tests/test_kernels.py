@@ -1,0 +1,151 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp
+oracles, swept over shapes, dtypes, and unique-count budgets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ucr
+from repro.core.codr_linear import pack_unique, unpack_unique
+from repro.core.serving import restrict_unique
+from repro.kernels.codr_matmul import codr_matmul
+from repro.kernels.codr_matmul.ref import codr_matmul_ref
+from repro.kernels.smm_conv import smm_conv, smm_conv_ref
+
+
+def _packed(rng, k, n, n_unique, dtype=jnp.float32):
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    q, s = ucr.quantize_int8(w)
+    q = restrict_unique(q, n_unique)
+    return pack_unique(q, s, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# codr_matmul (performance kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mkn", [(64, 64, 64), (128, 256, 128),
+                                 (32, 384, 512), (256, 128, 256)])
+@pytest.mark.parametrize("n_unique", [4, 16])
+def test_codr_matmul_shapes(mkn, n_unique, rng):
+    m, k, n = mkn
+    pw = _packed(rng, k, n, n_unique)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    y = codr_matmul(x, pw, bm=64, bn=64, bk=64, interpret=True)
+    yr = codr_matmul_ref(x, pw.packed, pw.table, pw.scale.reshape(-1),
+                         bits=pw.bits, n=n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_codr_matmul_dtypes(dtype, rng):
+    pw = _packed(rng, 128, 128, 16, dtype=dtype)
+    x = jnp.asarray(rng.normal(size=(64, 128)), dtype=dtype)
+    y = codr_matmul(x, pw, interpret=True)
+    yr = codr_matmul_ref(x, pw.packed, pw.table, pw.scale.reshape(-1),
+                         bits=pw.bits, n=128)
+    assert y.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("blocks", [(32, 32, 32), (64, 128, 32),
+                                    (128, 64, 128)])
+def test_codr_matmul_block_sweep(blocks, rng):
+    bm, bn, bk = blocks
+    pw = _packed(rng, 128, 256, 16)
+    x = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    y = codr_matmul(x, pw, bm=bm, bn=bn, bk=bk, interpret=True)
+    yr = codr_matmul_ref(x, pw.packed, pw.table, pw.scale.reshape(-1),
+                         bits=pw.bits, n=256)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_pack_unpack_roundtrip(rng):
+    for n_unique in (2, 4, 16, 256):
+        w = rng.normal(size=(32, 64)).astype(np.float32)
+        q, s = ucr.quantize_int8(w)
+        q = restrict_unique(q, n_unique)
+        pw = pack_unique(q, s, dtype=jnp.float32)
+        dense = unpack_unique(pw.packed, pw.table, bits=pw.bits, n=64)
+        np.testing.assert_allclose(np.asarray(dense), q.astype(np.float32))
+
+
+def test_compression_ratio_scales_with_unique_budget(rng):
+    w = rng.normal(size=(256, 256)).astype(np.float32)
+    q, s = ucr.quantize_int8(w)
+    r16 = pack_unique(restrict_unique(q, 16), s).compression_vs_bf16
+    r4 = pack_unique(restrict_unique(q, 4), s).compression_vs_bf16
+    assert r4 > r16 > 3.0          # 4-bit pack ≈ 4x vs bf16, 2-bit ≈ 8x
+
+
+# ---------------------------------------------------------------------------
+# smm_conv (faithful-mechanism kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 3, 3, 3, 10, 10), (8, 2, 2, 2, 8, 8),
+                                   (8, 5, 1, 1, 6, 6)])
+@pytest.mark.parametrize("density", [0.2, 0.8])
+def test_smm_conv_kernel_exact(shape, density, rng):
+    m, n, rk, ck, ri, ci = shape
+    w = rng.normal(size=(m, n, rk, ck)).astype(np.float32)
+    w[rng.random(w.shape) > density] = 0
+    code = ucr.encode_conv_layer(w, t_m=4, t_n=2)
+    x = rng.integers(-8, 8, size=(n, ri, ci)).astype(np.int8)
+    got = smm_conv(jnp.asarray(x), code, interpret=True)
+    ref = smm_conv_ref(x, code)
+    assert float(jnp.abs(got - ref).max()) == 0.0
+
+
+def test_smm_conv_all_zero_layer(rng):
+    w = np.zeros((4, 2, 3, 3), dtype=np.float32)
+    code = ucr.encode_conv_layer(w, t_m=4, t_n=2)
+    x = rng.integers(-8, 8, size=(2, 8, 8)).astype(np.int8)
+    got = smm_conv(jnp.asarray(x), code, interpret=True)
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# flash_attention (fused production kernel — EXPERIMENTS §Perf Pair 2 fix)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attention import (flash_attention_kernel,
+                                           flash_attention_ref)
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 4, 2, 32), (1, 256, 8, 8, 16),
+                                   (2, 96, 4, 1, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_kernel(shape, causal, key=None):
+    import jax
+    key = jax.random.PRNGKey(0)
+    b, s, hq, hkv, d = shape
+    q = jax.random.normal(key, (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d),
+                          jnp.float32)
+    got = flash_attention_kernel(q, k, v, causal=causal, bq=64, bk=64,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_kernel_block_sweep(rng):
+    import jax
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 128, 2, 2, ), jnp.float32)  # placeholder
+    b, s, h, d = 1, 128, 2, 32
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    ref = flash_attention_ref(q, k, v, causal=True)
+    for bq, bk in ((32, 32), (128, 64), (64, 128)):
+        got = flash_attention_kernel(q, k, v, causal=True, bq=bq, bk=bk,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,92 @@
+"""Property tests for the customized RLE codec (paper §III-C)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rle, ucr
+
+
+def weight_vectors(max_len=512):
+    return st.lists(st.integers(-128, 127), min_size=1, max_size=max_len)
+
+
+@given(weight_vectors())
+@settings(max_examples=200, deadline=None)
+def test_rle_roundtrip_lossless(vals):
+    w = np.array(vals, dtype=np.int8)
+    u = ucr.ucr_transform(w)
+    enc = rle.encode_vector(u.unique_vals, u.reps, u.indexes, u.vector_len)
+    assert np.array_equal(rle.decode_vector(enc), w)
+
+
+@given(weight_vectors())
+@settings(max_examples=100, deadline=None)
+def test_size_only_matches_exact_bitstream(vals):
+    w = np.array(vals, dtype=np.int8)
+    u = ucr.ucr_transform(w)
+    enc = rle.encode_vector(u.unique_vals, u.reps, u.indexes, u.vector_len)
+    size = rle.encoded_bits_size_only(u.unique_vals, u.reps, u.indexes,
+                                      u.vector_len)
+    assert size == enc.total_bits
+
+
+@given(st.lists(st.integers(-128, 127), min_size=2, max_size=64),
+       st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_param_search_is_optimal(vals, fixed_b):
+    """The searched Δ parameter never loses to any fixed bit-length."""
+    deltas = np.diff(np.unique(np.array(vals, dtype=np.int64)), prepend=0)
+    best = rle.search_delta_param(deltas)
+    best_bits = rle.escape_stream_bits(deltas, best, rle.FULL_BITS)
+    assert best_bits <= rle.escape_stream_bits(deltas, fixed_b, rle.FULL_BITS)
+
+
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=64),
+       st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_rep_overflow_chains_preserve_counts(reps, bits):
+    reps = np.asarray(reps)
+    entries, dummy = rle.split_rep_overflow(reps, bits)
+    # total repetitions preserved
+    assert entries.sum() == reps.sum()
+    # exactly one non-dummy entry per original unique weight
+    assert (~dummy).sum() == len(reps)
+    # every entry fits the bit budget (stored as count-1)
+    assert (entries >= 1).all() and (entries <= (1 << bits)).all()
+
+
+def test_escape_encoding_matches_paper_example():
+    """Fig. 4: small Δs in low-precision fields, escapes at full width."""
+    deltas = np.array([1, 2, 1, 120])     # last one cannot fit in 2 bits
+    bits = rle.escape_stream_bits(deltas, 2, 8)
+    assert bits == 3 * (2 + 1) + (8 + 1)
+
+
+def test_index_stream_absolute_fallback():
+    """Negative index Δ (new unique-weight group) → absolute mode."""
+    idx = np.array([3, 5, 9, 2, 4])       # 9→2 is a negative delta
+    deltas, absolute = rle.index_delta_fields(idx)
+    assert deltas[3] < 0 and absolute[3] == 2
+    s = rle.encode_escape_stream(deltas, 2, 4, absolute=absolute)
+    out = rle.decode_escape_stream(s, absolute_mode=True)
+    vals, escaped = out[0], out[1].astype(bool)
+    rebuilt, prev = [], 0
+    for v, e in zip(vals, escaped):
+        prev = v if e else prev + v
+        rebuilt.append(prev)
+    assert rebuilt == list(idx)
+
+
+@pytest.mark.parametrize("density", [0.05, 0.3, 0.9])
+@pytest.mark.parametrize("n_unique", [4, 16, 256])
+def test_compression_improves_with_sparsity_and_repetition(density, n_unique):
+    rng = np.random.default_rng(0)
+    w = rng.integers(-128, 128, size=4096)
+    w = (w // (256 // n_unique) * (256 // n_unique)).astype(np.int8)
+    w[rng.random(4096) > density] = 0
+    u = ucr.ucr_transform(w)
+    bits = rle.encoded_bits_size_only(u.unique_vals, u.reps, u.indexes,
+                                      u.vector_len)
+    dense_bits = 8 * 4096
+    if density <= 0.3:
+        assert bits < dense_bits

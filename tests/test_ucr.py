@@ -1,0 +1,59 @@
+"""Universal Computation Reuse invariants (paper §II-D)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ucr
+
+
+@given(st.lists(st.integers(-128, 127), min_size=1, max_size=512))
+@settings(max_examples=200, deadline=None)
+def test_transform_reconstruct_roundtrip(vals):
+    w = np.array(vals, dtype=np.int8)
+    u = ucr.ucr_transform(w)
+    assert np.array_equal(ucr.ucr_reconstruct(u), w)
+
+
+@given(st.lists(st.integers(-128, 127), min_size=1, max_size=512))
+@settings(max_examples=200, deadline=None)
+def test_unify_invariants(vals):
+    w = np.array(vals, dtype=np.int8)
+    u = ucr.ucr_transform(w)
+    # sorted strictly ascending unique non-zero values
+    assert (np.diff(u.unique_vals) > 0).all()
+    assert (u.unique_vals != 0).all()
+    # reps count every nonzero exactly once
+    assert u.reps.sum() == (w != 0).sum()
+    # per-group indexes ascend (CoDR orders repetitions by position)
+    cursor = 0
+    for rep in u.reps:
+        grp = u.indexes[cursor:cursor + int(rep)]
+        assert (np.diff(grp) > 0).all()
+        cursor += int(rep)
+    # multiplications needed = unique count ≤ nonzero count ≤ total
+    assert len(u.unique_vals) <= u.n_nonzero <= u.vector_len
+
+
+def test_quantize_int8_bounds_and_inverse(rng):
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    q, scale = ucr.quantize_int8(w)
+    assert q.dtype == np.int8 and np.abs(q).max() <= 127
+    err = np.abs(ucr.dequantize_int8(q, scale) - w).max()
+    assert err <= scale * 0.5 + 1e-6
+
+
+def test_per_channel_quantization(rng):
+    w = rng.normal(size=(16, 8)).astype(np.float32) * \
+        np.logspace(-2, 2, 8)[None, :]
+    q, scale = ucr.quantize_int8(w, per_channel_axis=1)
+    assert scale.shape == (1, 8)
+    err = np.abs(ucr.dequantize_int8(q, scale) - w)
+    assert (err <= scale * 0.5 + 1e-6).all()
+
+
+def test_layer_encoding_matches_size_only(rng):
+    w = rng.normal(size=(8, 4, 3, 3)).astype(np.float32)
+    w[rng.random(w.shape) < 0.5] = 0
+    code = ucr.encode_conv_layer(w, t_m=4, t_n=2)
+    size, n = ucr.layer_code_size_only(w, t_m=4, t_n=2)
+    assert n == w.size
+    assert size == code.total_bits
