@@ -1,0 +1,94 @@
+"""End-to-end CoDR engine benchmark: encode-once / run-many throughput
+plus per-layer SRAM-access estimates from the dataflow model.
+
+  PYTHONPATH=src python benchmarks/engine.py [--small] [--batch B]
+
+CSV lines (the harness format): ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+try:
+    from benchmarks.common import Timer, csv_line
+except ImportError:                                   # run as a script
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import Timer, csv_line
+
+from repro.core.engine import build_random_model, paper_model_shapes
+from repro.core.serving import CodrBatchServer
+
+
+def build(small: bool):
+    """conv → conv → linear model on paper-CNN channel geometry."""
+    rng = np.random.default_rng(0)
+    if small:
+        shapes = paper_model_shapes("vgg16", n_conv=2, ri=20, ci=20)
+        hw, n_out = (20, 20), 10
+    else:
+        shapes = paper_model_shapes("alexnet", n_conv=2, ri=67, ci=67)
+        hw, n_out = (67, 67), 100
+    # benchmark path: tiles decode from the retained UCR vectors
+    # (bit-identical to the bitstream decode, which tests exercise)
+    model = build_random_model(shapes, n_out=n_out, density=0.4, rng=rng,
+                               decode_source="ucr")
+    return model, hw
+
+
+def main(small: bool = False, batch: int = 8, iters: int = 5) -> None:
+    model, hw = build(small)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(batch, *hw, model.layers[0].code.shape[1])
+                   ).astype(np.float32)
+
+    with Timer() as t_enc:                     # offline decode (once)
+        for layer in model.layers:
+            _ = layer.tiles
+    _ = np.asarray(model.run(x))               # compile + first dispatch
+
+    with Timer() as t_run:
+        for _ in range(iters):
+            y = model.run(x)
+        y.block_until_ready()
+    us = t_run.dt / iters * 1e6
+    imgs_s = batch * iters / t_run.dt
+    print(csv_line("engine_forward", us,
+                   f"imgs_per_s={imgs_s:.1f};batch={batch};"
+                   f"bits_per_weight={model.bits_per_weight():.2f};"
+                   f"decode_s={t_enc.dt:.3f}"))
+
+    server = CodrBatchServer(model, max_batch=batch)
+    samples = [rng.normal(size=(*hw, model.layers[0].code.shape[1])
+                          ).astype(np.float32) for _ in range(batch + 3)]
+    with Timer() as t_srv:
+        outs = server.serve(samples)
+    print(csv_line("engine_serve", t_srv.dt / len(outs) * 1e6,
+                   f"requests={len(outs)};batches={server.batches_run}"))
+
+    for name, acc in model.sram_report(hw):
+        print(csv_line(f"engine_sram_{name}", 0.0,
+                       f"total_sram={acc.total_sram:.0f};"
+                       f"feature_sram={acc.feature_sram:.0f};"
+                       f"weight_rows={acc.weight_sram_rows:.0f}"))
+
+
+def cli(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="tiny model (CI smoke run)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args(argv)
+    if args.batch < 1 or args.iters < 1:
+        ap.error("--batch and --iters must be >= 1")
+    print("name,us_per_call,derived")
+    main(small=args.small, batch=args.batch, iters=args.iters)
+
+
+if __name__ == "__main__":
+    cli()

@@ -1,14 +1,15 @@
 """Benchmark harness — one module per paper table/figure plus the
 roofline report.  Prints ``name,us_per_call,derived`` CSV lines.
 
-  python -m benchmarks.run [--only fig6|fig7|fig8|kernels|roofline]
+  python -m benchmarks.run [--only fig6|fig7|fig8|kernels|roofline|engine]
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-from benchmarks import compression, energy, kernels, roofline, sram_access
+from benchmarks import compression, energy, engine, kernels, roofline, \
+    sram_access
 
 SUITES = {
     "fig6": compression.main,
@@ -16,6 +17,7 @@ SUITES = {
     "fig8": energy.main,
     "kernels": kernels.main,
     "roofline": roofline.main,
+    "engine": engine.main,
 }
 
 

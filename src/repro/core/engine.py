@@ -1,0 +1,501 @@
+"""CoDR inference engine: encode once, run many (paper §II-D + §III-B).
+
+This module connects the previously separate pieces — the offline
+UCR + customized-RLE encoder (:mod:`repro.core.ucr`,
+:mod:`repro.core.rle`), the scalar–matrix-multiplication execution model
+(:mod:`repro.core.smm`, :mod:`repro.kernels.smm_conv`), and the dataflow
+SRAM accounting (:mod:`repro.core.dataflow`) — into an executable model:
+
+* :class:`CodrConv2D` / :class:`CodrLinear` — one layer each.  At
+  construction the float weights run through the paper's offline pipeline
+  exactly once (quantize → tile → sort/densify/unify → Δ → RLE
+  bitstreams).  The float weights are kept only as the test oracle; the
+  layer *executes* from the bitstreams.
+* **Decode-on-dispatch** — the first forward pass decodes each output
+  tile's weight vectors from the real RLE bitstreams
+  (:func:`repro.core.rle.decode_vector`), proving the stored code is
+  executable, and caches the int8 tiles (offline decode is once-per-model,
+  §II-D: "zero on-chip overhead").
+* **Input/output-stationary tiled dispatch** — the forward pass maps the
+  CoDR loop nest (Fig. 5a): output-channel tiles are the outer loop, each
+  tile's outputs are produced exactly once (output stationary) while the
+  full input batch is broadcast to every tile (semi input stationary).
+  Implemented as a ``vmap`` over the stacked decoded tiles around
+  ``jax.lax.conv_general_dilated``.
+* :class:`CodrModel` — chains layers (conv → conv → … → linear) over
+  NHWC batches, auto-flattening at the conv→linear boundary, with a dense
+  ``jax.lax.conv`` reference oracle for every layer and per-layer SRAM
+  access estimates from :func:`repro.core.dataflow.codr_accesses`.
+
+Backends:
+
+``tiled``       batched vmap-over-tiles lax.conv path (default; any stride)
+``smm``         NumPy faithful MPE/APE execution (:func:`repro.core.smm.conv2d_smm`)
+``smm_kernel``  Pallas MPE/APE kernel per sample (stride 1; interpret on CPU)
+
+The ``smm*`` backends run the differential scalar–matrix-multiply
+mechanism itself and require integer-valued activations (they compute in
+exact integer arithmetic; the layer scale is applied afterwards).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataflow, rle, smm, ucr
+from repro.core.dataflow import CODR_TILING, ConvShape
+
+__all__ = [
+    "CodrConv2D", "CodrLinear", "CodrModel", "LayerStats",
+    "build_random_model", "paper_model_shapes",
+]
+
+
+# ---------------------------------------------------------------------------
+# per-layer statistics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerStats:
+    name: str
+    kind: str                      # "conv" | "linear"
+    shape: tuple[int, ...]
+    n_weights: int
+    encoded_bits: int
+    bits_per_weight: float
+    density: float
+    n_unique: int                  # sum of per-vector unique counts
+    n_nonzero: int
+
+
+def _layer_stats(name: str, kind: str, code: ucr.LayerCode) -> LayerStats:
+    n_unique = sum(len(u.unique_vals) for u in code.ucr)
+    n_nonzero = sum(u.n_nonzero for u in code.ucr)
+    return LayerStats(
+        name=name, kind=kind, shape=code.shape, n_weights=code.n_weights,
+        encoded_bits=code.total_bits, bits_per_weight=code.bits_per_weight,
+        density=n_nonzero / max(code.n_weights, 1),
+        n_unique=n_unique, n_nonzero=n_nonzero)
+
+
+# ---------------------------------------------------------------------------
+# bitstream → dense tiles (decode-on-dispatch)
+# ---------------------------------------------------------------------------
+
+def decode_tile(code: ucr.LayerCode, mt: int, *,
+                source: str = "bitstream") -> np.ndarray:
+    """Decode output-channel tile ``mt`` of a layer's code.
+
+    ``source="bitstream"`` decodes the real RLE bitstreams
+    (:func:`repro.core.rle.decode_vector` — proves the stored code is
+    executable); ``source="ucr"`` rebuilds from the retained UCR vectors
+    (bit-identical, much faster — benchmark path).
+
+    Returns int8 ``(t_m, N, RK, CK)``; rows past the true output-channel
+    count (ragged last tile) are zero.  Vector order inside a tile is
+    ascending input channel — the order ``ucr._iter_tile_vectors`` emits.
+    """
+    n = code.shape[1]
+    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
+    tm_eff = min(code.t_m, code.shape[0] - mt * code.t_m)
+    w = np.zeros((code.t_m, n, rk, ck), dtype=np.int8)
+    for nn in range(n):
+        if source == "bitstream":
+            vec = rle.decode_vector(code.vectors[mt * n + nn])
+        else:
+            vec = ucr.ucr_reconstruct(code.ucr[mt * n + nn])
+        w[:tm_eff, nn] = vec.reshape(tm_eff, rk, ck)
+    return w
+
+
+def decode_all_tiles(code: ucr.LayerCode, *,
+                     source: str = "bitstream") -> np.ndarray:
+    """All tiles, stacked: int8 ``(n_tiles, t_m, N, RK, CK)``."""
+    n_tiles = -(-code.shape[0] // code.t_m)
+    return np.stack([decode_tile(code, mt, source=source)
+                     for mt in range(n_tiles)])
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+class CodrConv2D:
+    """A conv layer executed from its CoDR code (valid padding, NHWC).
+
+    ``w`` is float ``(M, N, RK, CK)`` (OIHW); encoding happens once here.
+    """
+
+    kind = "conv"
+
+    def __init__(self, w: np.ndarray, bias: np.ndarray | None = None, *,
+                 stride: int = 1, t_m: int = 4, t_n: int = 4,
+                 activation: str | None = None, name: str = "conv",
+                 decode_source: str = "bitstream"):
+        w = np.asarray(w, dtype=np.float32)
+        assert w.ndim == 4, "conv weights must be (M, N, RK, CK)"
+        self.name = name
+        self.stride = int(stride)
+        self.activation = activation
+        self.decode_source = decode_source
+        self.code = ucr.encode_conv_layer(w, t_m=t_m, t_n=t_n)
+        self.bias = None if bias is None else np.asarray(bias, np.float32)
+        self._w_ref = w                      # oracle only — never executed
+        self._tiles: np.ndarray | None = None  # decoded int8 tile cache
+        self._tiles_dev: jax.Array | None = None
+        self._forward = None                   # jitted dispatch cache
+
+    # -- offline decode -----------------------------------------------------
+    @property
+    def tiles(self) -> np.ndarray:
+        if self._tiles is None:
+            self._tiles = decode_all_tiles(self.code,
+                                           source=self.decode_source)
+        return self._tiles
+
+    @property
+    def tiles_device(self) -> jax.Array:
+        if self._tiles_dev is None:
+            self._tiles_dev = jnp.asarray(self.tiles, jnp.float32)
+        return self._tiles_dev
+
+    def decoded_weights(self) -> np.ndarray:
+        """Dense int8 ``(M, N, RK, CK)`` rebuilt from the bitstreams."""
+        t = self.tiles
+        m = self.code.shape[0]
+        return t.reshape(-1, *t.shape[2:])[:m]
+
+    def verify_roundtrip(self) -> None:
+        """Bitstream decode must equal direct quantization of the floats."""
+        q, _ = ucr.quantize_int8(self._w_ref)
+        if not np.array_equal(self.decoded_weights(), q):
+            raise AssertionError(f"{self.name}: UCR+RLE roundtrip mismatch")
+
+    # -- stats --------------------------------------------------------------
+    def stats(self) -> LayerStats:
+        return _layer_stats(self.name, self.kind, self.code)
+
+    def out_hw(self, ri: int, ci: int) -> tuple[int, int]:
+        rk, ck = self.code.shape[2], self.code.shape[3]
+        return ((ri - rk) // self.stride + 1, (ci - ck) // self.stride + 1)
+
+    def conv_shape(self, ri: int, ci: int) -> ConvShape:
+        m, n, rk, ck = self.code.shape
+        return ConvShape(m, n, rk, ck, ri, ci, self.stride)
+
+    # -- execution ----------------------------------------------------------
+    def _build_forward(self):
+        scale = float(np.asarray(self.code.scale))
+        m = self.code.shape[0]
+        stride = (self.stride, self.stride)
+        bias = None if self.bias is None else jnp.asarray(self.bias)
+        act = self.activation
+
+        def tile_conv(x, wt):
+            # one output-stationary tile: all its outputs produced in one
+            # pass over the broadcast input
+            return jax.lax.conv_general_dilated(
+                x, wt, window_strides=stride, padding="VALID",
+                dimension_numbers=("NHWC", "OIHW", "NHWC"))
+
+        @jax.jit
+        def forward(x, tiles_f32):
+            # (n_tiles, B, RO, CO, t_m): tiles dispatched in parallel, each
+            # writes its own output-channel slice exactly once
+            per_tile = jax.vmap(tile_conv, in_axes=(None, 0))(x, tiles_f32)
+            t, b, ro, co, tm = per_tile.shape
+            y = jnp.moveaxis(per_tile, 0, 3).reshape(b, ro, co, t * tm)
+            y = y[..., :m] * scale
+            if bias is not None:
+                y = y + bias
+            if act == "relu":
+                y = jax.nn.relu(y)
+            return y
+
+        return forward
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """``x``: NHWC ``(B, RI, CI, N)`` float32 → ``(B, RO, CO, M)``."""
+        if self._forward is None:
+            self._forward = self._build_forward()
+        return self._forward(jnp.asarray(x, jnp.float32), self.tiles_device)
+
+    def reference(self, x: jax.Array) -> jax.Array:
+        """Dense ``jax.lax.conv`` oracle on the ORIGINAL float weights."""
+        y = jax.lax.conv_general_dilated(
+            jnp.asarray(x, jnp.float32), jnp.asarray(self._w_ref),
+            window_strides=(self.stride, self.stride), padding="VALID",
+            dimension_numbers=("NHWC", "OIHW", "NHWC"))
+        if self.bias is not None:
+            y = y + jnp.asarray(self.bias)
+        return jax.nn.relu(y) if self.activation == "relu" else y
+
+    # faithful-mechanism execution (8-bit feature datapath, stride 1 for
+    # the Pallas kernel) — per sample scalar–matrix multiplies + routing
+    def smm_forward(self, x: jax.Array, *, kernel: bool = False) -> jax.Array:
+        """Run the differential SMM mechanism itself.  Activations go
+        through the accelerator's 8-bit feature path: integer-valued
+        inputs within int8 range run exactly; anything else is symmetric
+        int8-quantized first (its scale folds into the output)."""
+        xf = np.asarray(x, dtype=np.float32)
+        if np.array_equal(xf, np.rint(xf)) and np.abs(xf).max() <= 127:
+            xi, x_scale = xf.astype(np.int32), 1.0
+        else:
+            q8, s = ucr.quantize_int8(xf)
+            xi, x_scale = q8.astype(np.int32), float(np.asarray(s))
+        scale = float(np.asarray(self.code.scale)) * x_scale
+        if kernel:
+            if self.stride != 1:
+                raise NotImplementedError("smm kernel path is stride-1 only")
+            from repro.kernels.smm_conv import smm_conv_batched
+            y = smm_conv_batched(jnp.asarray(np.moveaxis(xi, 3, 1),
+                                             jnp.float32), self.code)
+            y = jnp.moveaxis(y, 1, 3) * scale
+        else:
+            outs = [smm.conv2d_smm(np.moveaxis(xi[b], 2, 0), self.code,
+                                   self.stride)
+                    for b in range(xi.shape[0])]
+            y = jnp.asarray(np.moveaxis(np.stack(outs), 1, 3),
+                            jnp.float32) * scale
+        if self.bias is not None:
+            y = y + jnp.asarray(self.bias)
+        return jax.nn.relu(y) if self.activation == "relu" else y
+
+
+class CodrLinear:
+    """A fully-connected layer executed from its CoDR code.
+
+    ``w`` is float ``(M, N)`` = (out features, in features) — a conv with a
+    1×1 kernel (paper Fig. 1); a weight *column* is one UCR vector.
+    """
+
+    kind = "linear"
+
+    def __init__(self, w: np.ndarray, bias: np.ndarray | None = None, *,
+                 t_m: int = 256, activation: str | None = None,
+                 name: str = "linear", decode_source: str = "bitstream"):
+        w = np.asarray(w, dtype=np.float32)
+        assert w.ndim == 2, "linear weights must be (M, N)"
+        self.name = name
+        self.activation = activation
+        self.decode_source = decode_source
+        self.code = ucr.encode_linear_layer(w, t_m=min(t_m, w.shape[0]))
+        self.bias = None if bias is None else np.asarray(bias, np.float32)
+        self._w_ref = w
+        self._tiles: np.ndarray | None = None
+        self._tiles_dev: jax.Array | None = None
+        self._forward = None
+
+    @property
+    def tiles(self) -> np.ndarray:
+        if self._tiles is None:
+            self._tiles = decode_all_tiles(self.code,  # (T, t_m, N, 1, 1)
+                                           source=self.decode_source)
+        return self._tiles
+
+    @property
+    def tiles_device(self) -> jax.Array:
+        if self._tiles_dev is None:         # (T, t_m, N), reshaped once
+            t = self.tiles
+            self._tiles_dev = jnp.asarray(
+                t.reshape(t.shape[0], t.shape[1], -1), jnp.float32)
+        return self._tiles_dev
+
+    def decoded_weights(self) -> np.ndarray:
+        t = self.tiles
+        m, n = self.code.shape[0], self.code.shape[1]
+        return t.reshape(-1, n)[:m]
+
+    def verify_roundtrip(self) -> None:
+        q, _ = ucr.quantize_int8(self._w_ref)
+        if not np.array_equal(self.decoded_weights(), q):
+            raise AssertionError(f"{self.name}: UCR+RLE roundtrip mismatch")
+
+    def stats(self) -> LayerStats:
+        return _layer_stats(self.name, self.kind, self.code)
+
+    def _build_forward(self):
+        scale = float(np.asarray(self.code.scale))
+        m = self.code.shape[0]
+        bias = None if self.bias is None else jnp.asarray(self.bias)
+        act = self.activation
+
+        @jax.jit
+        def forward(x, tiles_f32):
+            # (T, t_m, N) decoded tiles; each tile's outputs written once
+            per_tile = jax.vmap(lambda wt: x @ wt.T, in_axes=0)(tiles_f32)
+            t, b, tm = per_tile.shape
+            y = jnp.moveaxis(per_tile, 0, 1).reshape(b, t * tm)[:, :m] * scale
+            if bias is not None:
+                y = y + bias
+            if act == "relu":
+                y = jax.nn.relu(y)
+            return y
+
+        return forward
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """``x``: ``(B, N)`` float32 → ``(B, M)``."""
+        if self._forward is None:
+            self._forward = self._build_forward()
+        return self._forward(jnp.asarray(x, jnp.float32), self.tiles_device)
+
+    def reference(self, x: jax.Array) -> jax.Array:
+        y = jnp.asarray(x, jnp.float32) @ jnp.asarray(self._w_ref).T
+        if self.bias is not None:
+            y = y + jnp.asarray(self.bias)
+        return jax.nn.relu(y) if self.activation == "relu" else y
+
+
+# ---------------------------------------------------------------------------
+# model = chained layers
+# ---------------------------------------------------------------------------
+
+class CodrModel:
+    """A stack of CoDR layers with an end-to-end dense oracle.
+
+    ``run`` executes from the RLE bitstreams (decoded on first dispatch);
+    ``reference`` runs the original float weights through dense
+    ``jax.lax.conv`` / matmul — the golden parity target within int8
+    quantization tolerance.
+    """
+
+    def __init__(self, layers: Sequence[CodrConv2D | CodrLinear]):
+        self.layers = list(layers)
+
+    def _chain(self, x: jax.Array, step) -> jax.Array:
+        for layer in self.layers:
+            if layer.kind == "linear" and x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = step(layer, x)
+        return x
+
+    def run(self, batch: jax.Array, *, backend: str = "tiled") -> jax.Array:
+        """Forward an NHWC batch through the compressed model."""
+        if backend == "tiled":
+            return self._chain(batch, lambda l, x: l(x))
+        if backend in ("smm", "smm_kernel"):
+            kern = backend == "smm_kernel"
+
+            def step(l, x):
+                if l.kind == "conv":
+                    return l.smm_forward(x, kernel=kern)
+                return l(x)                       # linear: tiled path
+
+            return self._chain(batch, step)
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def reference(self, batch: jax.Array) -> jax.Array:
+        """Dense float oracle (uncompressed weights)."""
+        return self._chain(batch, lambda l, x: l.reference(x))
+
+    def quantized_reference(self, batch: jax.Array) -> jax.Array:
+        """Dense oracle on the DEQUANTIZED decoded weights — ``run`` must
+        match this exactly up to float summation order."""
+        def step(l, x):
+            w = l.decoded_weights().astype(np.float32) \
+                * float(np.asarray(l.code.scale))
+            if l.kind == "conv":
+                y = jax.lax.conv_general_dilated(
+                    jnp.asarray(x, jnp.float32), jnp.asarray(w),
+                    window_strides=(l.stride, l.stride), padding="VALID",
+                    dimension_numbers=("NHWC", "OIHW", "NHWC"))
+            else:
+                y = jnp.asarray(x, jnp.float32) @ jnp.asarray(w).T
+            if l.bias is not None:
+                y = y + jnp.asarray(l.bias)
+            return jax.nn.relu(y) if l.activation == "relu" else y
+
+        return self._chain(batch, step)
+
+    # -- bookkeeping --------------------------------------------------------
+    def verify_roundtrip(self) -> None:
+        for layer in self.layers:
+            layer.verify_roundtrip()
+
+    def stats(self) -> list[LayerStats]:
+        return [l.stats() for l in self.layers]
+
+    def total_bits(self) -> int:
+        return sum(l.code.total_bits for l in self.layers)
+
+    def bits_per_weight(self) -> float:
+        n = sum(l.code.n_weights for l in self.layers)
+        return self.total_bits() / max(n, 1)
+
+    def sram_report(self, input_hw: tuple[int, int],
+                    cfg: dataflow.TilingConfig = CODR_TILING
+                    ) -> list[tuple[str, dataflow.AccessCounts]]:
+        """Per-layer CoDR SRAM access estimates for one sample, tracking
+        spatial dims through the conv stack (linear = 1×1 conv on a 1×1
+        feature map)."""
+        ri, ci = input_hw
+        out = []
+        for layer in self.layers:
+            st = layer.stats()
+            if layer.kind == "conv":
+                shape = layer.conv_shape(ri, ci)
+                ri, ci = layer.out_hw(ri, ci)
+            else:
+                m, n = layer.code.shape[0], layer.code.shape[1]
+                shape = ConvShape(m, n, 1, 1, 1, 1, 1)
+            out.append((layer.name, dataflow.codr_accesses(
+                shape, cfg, float(layer.code.total_bits),
+                float(st.n_unique), float(st.n_nonzero))))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# model builders
+# ---------------------------------------------------------------------------
+
+def paper_model_shapes(net: str = "alexnet", n_conv: int = 2,
+                       ri: int | None = None, ci: int | None = None
+                       ) -> list[ConvShape]:
+    """Channel/kernel geometry of the first ``n_conv`` conv layers of a
+    paper CNN (configs/paper_cnns.py), optionally with reduced spatial
+    dims so test batches stay cheap (channel structure — what UCR
+    compresses — is untouched)."""
+    from repro.configs.paper_cnns import PAPER_CNNS
+    shapes = []
+    for s in PAPER_CNNS[net][:n_conv]:
+        use_ri = ri if ri is not None else s.ri
+        use_ci = ci if ci is not None else s.ci
+        shapes.append(ConvShape(s.m, s.n, s.rk, s.ck, use_ri, use_ci,
+                                s.stride))
+        ri = ci = None                      # only the first layer is forced
+    return shapes
+
+
+def build_random_model(shapes: Sequence[ConvShape], n_out: int, *,
+                       density: float = 0.4, rng=None,
+                       t_m: int = 4, t_n: int = 4,
+                       activation: str | None = "relu",
+                       decode_source: str = "bitstream") -> CodrModel:
+    """conv×len(shapes) → linear model with paper-style sparse Gaussian
+    weights; consecutive shapes must be spatially consistent (each layer's
+    input channels = previous layer's output channels)."""
+    rng = np.random.default_rng(0) if rng is None else rng
+    layers: list[CodrConv2D | CodrLinear] = []
+    ri, ci = shapes[0].ri, shapes[0].ci
+    for i, s in enumerate(shapes):
+        w = rng.normal(size=(s.m, s.n, s.rk, s.ck)).astype(np.float32) * 0.5
+        w[rng.random(w.shape) > density] = 0
+        layers.append(CodrConv2D(w, stride=s.stride, t_m=t_m, t_n=t_n,
+                                 activation=activation, name=f"conv{i}",
+                                 decode_source=decode_source))
+        ri, ci = layers[-1].out_hw(ri, ci)
+        if ri < 1 or ci < 1:
+            raise ValueError(f"input {shapes[0].ri}x{shapes[0].ci} too small:"
+                             f" feature map vanishes at layer {i}")
+    feat = ri * ci * shapes[-1].m
+    wl = rng.normal(size=(n_out, feat)).astype(np.float32) * 0.1
+    wl[rng.random(wl.shape) > density] = 0
+    layers.append(CodrLinear(wl, t_m=min(256, n_out), name="fc",
+                             decode_source=decode_source))
+    return CodrModel(layers)

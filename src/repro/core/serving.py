@@ -146,6 +146,55 @@ def codr_report(reports: list[TensorReport]) -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# batched request path over a CoDR engine model
+# ---------------------------------------------------------------------------
+
+class CodrBatchServer:
+    """Batched inference over a :class:`repro.core.engine.CodrModel`.
+
+    Single-sample requests are queued and executed together in fixed-size
+    batches (padding the ragged tail), so every forward pass reuses the
+    one jitted tile-dispatch computation per layer — the serving-side
+    complement of the engine's encode-once/run-many contract.
+    """
+
+    def __init__(self, model, *, max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.model = model
+        self.max_batch = max_batch
+        self._queue: list[np.ndarray] = []
+        self.batches_run = 0
+        self.requests_served = 0
+
+    def submit(self, x: np.ndarray) -> int:
+        """Queue one sample (no batch dim).  Returns its request id."""
+        self._queue.append(np.asarray(x, dtype=np.float32))
+        return self.requests_served + len(self._queue) - 1
+
+    def flush(self) -> list[np.ndarray]:
+        """Run all queued requests; returns outputs in submission order."""
+        outs: list[np.ndarray] = []
+        while self._queue:
+            chunk = self._queue[: self.max_batch]
+            del self._queue[: len(chunk)]
+            n_real = len(chunk)
+            if n_real < self.max_batch:      # pad → constant batch shape,
+                chunk = chunk + [chunk[-1]] * (self.max_batch - n_real)
+            y = np.asarray(self.model.run(jnp.asarray(np.stack(chunk))))
+            outs.extend(y[:n_real])
+            self.batches_run += 1
+            self.requests_served += n_real
+        return outs
+
+    def serve(self, samples) -> list[np.ndarray]:
+        """Convenience: submit + flush a list of single samples."""
+        for s in samples:
+            self.submit(s)
+        return self.flush()
+
+
 def codr_serving_stats(cfg, *, n_unique: int = 16, seed: int = 0) -> dict:
     """Per-decode-token weight HBM traffic under each format (GB)."""
     n_active = cfg.active_param_count()

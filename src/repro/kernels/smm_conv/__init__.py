@@ -1,4 +1,6 @@
-from repro.kernels.smm_conv.ops import smm_conv, pack_smm_operands
+from repro.kernels.smm_conv.ops import (smm_conv, smm_conv_batched,
+                                        pack_smm_operands)
 from repro.kernels.smm_conv.ref import smm_conv_ref
 
-__all__ = ["smm_conv", "pack_smm_operands", "smm_conv_ref"]
+__all__ = ["smm_conv", "smm_conv_batched", "pack_smm_operands",
+           "smm_conv_ref"]

@@ -45,18 +45,31 @@ def pack_smm_operands(code: LayerCode, n_in: int
                              "u_max": u_max, "l_max": l_max}
 
 
+def smm_conv_batched(x: jax.Array, code: LayerCode, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """Batched CoDR SMM convolution: ``x`` (B, N, RI, CI) → (B, M, RO, CO).
+
+    Operands are packed once; every sample reuses the same jitted Pallas
+    call (static shapes → one compile), the engine's encode-once/run-many
+    contract at the kernel level.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    _, n_in, ri, ci = x.shape
+    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
+    ro, co = ri - rk + 1, ci - ck + 1
+    deltas, entries, meta = pack_smm_operands(code, n_in)
+    deltas_j, entries_j = jnp.asarray(deltas), jnp.asarray(entries)
+    outs = [smm_conv_pallas(jnp.asarray(x[b], jnp.float32), deltas_j,
+                            entries_j, t_m=meta["t_m"], ro=ro, co=co,
+                            interpret=interpret)[: code.shape[0]]
+            for b in range(x.shape[0])]
+    return jnp.stack(outs)
+
+
 def smm_conv(x: jax.Array, code: LayerCode, *,
              interpret: bool | None = None) -> jax.Array:
     """CoDR SMM convolution of ``x`` (N, RI, CI) with an encoded layer.
     Returns pre-activation int-exact accumulations (float32), cropped to
     the true output-channel count."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    n_in, ri, ci = x.shape
-    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
-    ro, co = ri - rk + 1, ci - ck + 1
-    deltas, entries, meta = pack_smm_operands(code, n_in)
-    out = smm_conv_pallas(jnp.asarray(x, jnp.float32), jnp.asarray(deltas),
-                          jnp.asarray(entries), t_m=meta["t_m"], ro=ro, co=co,
-                          interpret=interpret)
-    return out[: code.shape[0]]
+    return smm_conv_batched(x[None], code, interpret=interpret)[0]

@@ -12,7 +12,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:                                   # jax >= 0.6 exports it at top level
+    from jax import shard_map
+except ImportError:                    # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import act_fn, dense_init, linear

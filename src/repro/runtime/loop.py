@@ -98,6 +98,10 @@ class TrainLoop:
             if step >= end:
                 break
             if cfg.fail_at_step is not None and step == cfg.fail_at_step:
+                # the simulated failure kills the *process*, not I/O issued
+                # steps ago: join the async writer so the last checkpoint
+                # commit isn't racily lost with the in-memory state.
+                self.ckpt.wait()
                 raise RuntimeError(f"simulated host failure at step {step}")
             t0 = time.monotonic()
             self.params, self.opt_state, metrics = self.step_fn(

@@ -6,6 +6,13 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True)
+def _seed_global_rngs():
+    """Deterministic runs: pin NumPy's global RNG before every test (JAX
+    randomness is already explicit via PRNGKey fixtures below)."""
+    np.random.seed(0)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,189 @@
+"""End-to-end CoDR engine: encode once → decode from bitstreams → tiled
+dispatch must match dense ``jax.lax.conv`` within int8 quantization
+tolerance (and the dequantized oracle near-exactly)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ucr
+from repro.core.dataflow import ConvShape
+from repro.core.engine import (CodrConv2D, CodrLinear, CodrModel,
+                               build_random_model, decode_all_tiles,
+                               paper_model_shapes)
+from repro.core.serving import CodrBatchServer
+
+
+@pytest.fixture
+def rng():
+    """Function-scoped override of the session rng: the parity tolerances
+    below are statistical, so every test must see the same draws whether
+    it runs alone or inside the full suite."""
+    return np.random.default_rng(0)
+
+
+def _sparse_weights(rng, shape, density, scale=0.5):
+    w = rng.normal(size=shape).astype(np.float32) * scale
+    w[rng.random(shape) > density] = 0
+    return w
+
+
+def _rel_err(a, b):
+    return float(jnp.abs(a - b).max() / (jnp.abs(b).max() + 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# property-based round trip: UCR encode → RLE bitstream → decode →
+# reconstruct == quantized weights, at multiple sparsity levels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("density", [0.05, 0.3, 0.7, 1.0])
+@pytest.mark.parametrize("shape", [(8, 4, 3, 3), (5, 3, 2, 2), (16, 2, 1, 1)])
+def test_bitstream_roundtrip_conv(shape, density, rng):
+    w = _sparse_weights(rng, shape, density)
+    code = ucr.encode_conv_layer(w, t_m=4, t_n=2)
+    q, _ = ucr.quantize_int8(w)
+    tiles = decode_all_tiles(code, source="bitstream")
+    dense = tiles.reshape(-1, *shape[1:])[: shape[0]]
+    assert np.array_equal(dense, q)
+    # fast decode path is bit-identical
+    assert np.array_equal(decode_all_tiles(code, source="ucr"), tiles)
+
+
+@pytest.mark.parametrize("density", [0.1, 0.5, 0.9])
+def test_bitstream_roundtrip_linear(density, rng):
+    w = _sparse_weights(rng, (24, 16), density)
+    layer = CodrLinear(w, t_m=8)
+    layer.verify_roundtrip()
+    q, _ = ucr.quantize_int8(w)
+    assert np.array_equal(layer.decoded_weights(), q)
+
+
+# ---------------------------------------------------------------------------
+# golden parity: one layer vs dense jax.lax.conv, shapes from the paper CNNs
+# ---------------------------------------------------------------------------
+
+PAPER_LAYER_CASES = [
+    # (net, spatial) — first conv of each paper CNN, reduced spatial dims
+    ("alexnet", 23), ("vgg16", 12), ("googlenet", 17),
+]
+
+
+@pytest.mark.parametrize("net,ri", PAPER_LAYER_CASES)
+def test_conv_layer_parity_paper_shapes(net, ri, rng):
+    s = paper_model_shapes(net, n_conv=1, ri=ri, ci=ri)[0]
+    w = _sparse_weights(rng, (s.m, s.n, s.rk, s.ck), density=0.4)
+    layer = CodrConv2D(w, stride=s.stride, name=f"{net}_conv0")
+    layer.verify_roundtrip()
+    x = rng.normal(size=(4, ri, ri, s.n)).astype(np.float32)
+    y = layer(x)
+    # dequantized-weights oracle: same math, only float summation order
+    wq = layer.decoded_weights().astype(np.float32) \
+        * float(np.asarray(layer.code.scale))
+    import jax
+    yq = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(wq), window_strides=(s.stride, s.stride),
+        padding="VALID", dimension_numbers=("NHWC", "OIHW", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yq),
+                               rtol=1e-4, atol=1e-4)
+    # float-weights oracle: int8 quantization tolerance
+    assert _rel_err(y, layer.reference(x)) < 0.08
+
+
+def test_conv_layer_ragged_tiles_and_bias(rng):
+    # m=10 not divisible by t_m=4 → ragged last tile must crop cleanly
+    w = _sparse_weights(rng, (10, 3, 3, 3), density=0.6)
+    b = rng.normal(size=10).astype(np.float32)
+    layer = CodrConv2D(w, b, t_m=4, activation="relu")
+    x = rng.normal(size=(2, 9, 9, 3)).astype(np.float32)
+    y = layer(x)
+    assert y.shape == (2, 7, 7, 10)
+    assert float(jnp.min(y)) >= 0.0                    # relu applied
+    assert _rel_err(y, layer.reference(x)) < 0.08
+
+
+# ---------------------------------------------------------------------------
+# faithful-mechanism backends agree with the tiled path
+# ---------------------------------------------------------------------------
+
+def test_smm_backends_exact_on_int_inputs(rng):
+    w = _sparse_weights(rng, (8, 3, 3, 3), density=0.5)
+    layer = CodrConv2D(w, t_m=4, t_n=2)
+    x = rng.integers(-8, 8, size=(2, 10, 10, 3)).astype(np.float32)
+    y = layer(x)
+    assert float(jnp.abs(y - layer.smm_forward(x)).max()) == 0.0
+    assert float(jnp.abs(y - layer.smm_forward(x, kernel=True)).max()) == 0.0
+
+
+def test_model_smm_backend_within_activation_quantization(rng):
+    shapes = [ConvShape(8, 3, 3, 3, 12, 12, 1), ConvShape(12, 8, 3, 3, 1, 1, 1)]
+    model = build_random_model(shapes, n_out=6, density=0.5, rng=rng,
+                               activation=None)
+    x = rng.integers(-5, 6, size=(3, 12, 12, 3)).astype(np.float32)
+    y = model.run(x)
+    # 8-bit feature path re-quantizes between layers → small bounded error
+    assert _rel_err(model.run(x, backend="smm"), y) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 3-layer paper CNN, batch ≥ 8, vs dense reference
+# ---------------------------------------------------------------------------
+
+def test_codr_model_three_layer_paper_cnn(rng):
+    shapes = paper_model_shapes("alexnet", n_conv=2, ri=35, ci=35)
+    model = build_random_model(shapes, n_out=10, density=0.3, rng=rng)
+    model.verify_roundtrip()                  # bitstream decode is lossless
+    x = rng.normal(size=(8, 35, 35, 3)).astype(np.float32)
+    y = model.run(x)
+    assert y.shape == (8, 10)
+    # exact parity (float order) vs dequantized decoded weights
+    yq = model.quantized_reference(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yq),
+                               rtol=1e-3, atol=1e-3)
+    # int8 quantization tolerance vs the dense float reference
+    assert _rel_err(y, model.reference(x)) < 0.08
+    # the compressed code is genuinely smaller than int8
+    assert model.bits_per_weight() < 8.0
+
+
+def test_model_stats_and_sram_report(rng):
+    shapes = [ConvShape(8, 3, 3, 3, 12, 12, 1), ConvShape(12, 8, 3, 3, 1, 1, 1)]
+    model = build_random_model(shapes, n_out=6, density=0.5, rng=rng)
+    stats = model.stats()
+    assert [s.kind for s in stats] == ["conv", "conv", "linear"]
+    assert all(s.encoded_bits > 0 and 0 < s.density <= 1 for s in stats)
+    report = model.sram_report((12, 12))
+    assert len(report) == 3
+    for (name, acc), st in zip(report, stats):
+        assert acc.total_sram > 0
+        # streamed weight bits derive from this layer's real encoded size
+        assert acc.dram_weight_bits == st.encoded_bits
+
+
+# ---------------------------------------------------------------------------
+# batched request path
+# ---------------------------------------------------------------------------
+
+def test_batch_server_matches_direct_run_and_orders_results(rng):
+    shapes = [ConvShape(6, 3, 3, 3, 10, 10, 1)]
+    model = build_random_model(shapes, n_out=4, density=0.5, rng=rng)
+    samples = [rng.normal(size=(10, 10, 3)).astype(np.float32)
+               for _ in range(7)]
+    server = CodrBatchServer(model, max_batch=4)
+    outs = server.serve(samples)
+    assert len(outs) == 7
+    assert server.batches_run == 2            # 4 + 3 (padded) requests
+    direct = np.asarray(model.run(jnp.asarray(np.stack(samples))))
+    for got, want in zip(outs, direct):
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_batch_server_incremental_submit(rng):
+    shapes = [ConvShape(4, 2, 2, 2, 6, 6, 1)]
+    model = build_random_model(shapes, n_out=3, density=0.8, rng=rng)
+    server = CodrBatchServer(model, max_batch=2)
+    xs = [rng.normal(size=(6, 6, 2)).astype(np.float32) for _ in range(3)]
+    ids = [server.submit(x) for x in xs]
+    assert ids == [0, 1, 2]
+    outs = server.flush()
+    assert len(outs) == 3 and not server.flush()
+    assert server.requests_served == 3

@@ -1,6 +1,8 @@
 """Property tests for the customized RLE codec (paper §III-C)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import rle, ucr

@@ -1,5 +1,8 @@
 """Universal Computation Reuse invariants (paper §II-D)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ucr
