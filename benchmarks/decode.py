@@ -1,0 +1,118 @@
+"""RLE decode-throughput benchmark: scalar ``rle.decode_vector`` (the
+parity oracle) vs the vectorized bulk decoder ``rle.decode_layer`` on
+paper-CNN layer shapes (§V-A nets, paper-style sparse weights).
+
+  PYTHONPATH=src python benchmarks/decode.py [--small] [--json PATH]
+
+CSV lines (harness format): ``name,us_per_call,derived`` with decoded
+MB/s, vectors/s and the bulk-vs-scalar speedup per layer; a JSON summary
+(default ``BENCH_decode.json``) records the numbers so the perf
+trajectory is tracked PR over PR.  Parity of the two decoders is
+asserted on every benchmarked layer.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+try:
+    from benchmarks.common import Timer, csv_line
+except ImportError:                                   # run as a script
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import Timer, csv_line
+
+from repro.core import rle, ucr
+
+# (name, net, layer index, density) — paper §V-A geometry; spatial dims
+# are irrelevant to weight decode so the shape table is used directly.
+FULL_LAYERS = [
+    ("alexnet_conv2", "alexnet", 1, 0.5),
+    ("vgg16_conv3", "vgg16", 2, 0.2),
+    ("googlenet_inc4", "googlenet", 4, 0.6),
+]
+SMALL_LAYERS = [
+    ("alexnet_conv2_s", "alexnet", 1, 0.5),
+]
+SCALAR_SAMPLE = 192            # scalar path timed on a vector sample
+
+
+def build_code(net: str, idx: int, density: float, *, small: bool,
+               rng) -> ucr.LayerCode:
+    from repro.configs.paper_cnns import PAPER_CNNS
+    s = PAPER_CNNS[net][idx]
+    m, n = (s.m, s.n) if not small else (max(s.m // 8, 4), max(s.n // 8, 2))
+    w = rng.normal(size=(m, n, s.rk, s.ck)).astype(np.float32) * 0.5
+    w[rng.random(w.shape) > density] = 0
+    return ucr.encode_conv_layer(w, t_m=4, t_n=4)
+
+
+def bench_layer(name: str, code: ucr.LayerCode) -> dict:
+    n_vec = len(code.vectors)
+    payload_mb = code.total_bits / 8 / 1e6
+
+    sample = code.vectors[:min(SCALAR_SAMPLE, n_vec)]
+    with Timer() as t_scalar:
+        scalar_out = [rle.decode_vector(v) for v in sample]
+    scalar_s = t_scalar.dt / len(sample) * n_vec      # extrapolated
+
+    with Timer() as t_bulk:
+        bulk = rle.decode_layer(code)
+    for i, want in enumerate(scalar_out):             # bit-exact parity
+        if not np.array_equal(bulk[i, : len(want)], want):
+            raise AssertionError(f"{name}: bulk decode != scalar oracle "
+                                 f"at vector {i}")
+
+    return {
+        "layer": name,
+        "shape": list(code.shape),
+        "n_vectors": n_vec,
+        "payload_mb": payload_mb,
+        "scalar_s": scalar_s,
+        "bulk_s": t_bulk.dt,
+        "scalar_mb_s": payload_mb / scalar_s,
+        "bulk_mb_s": payload_mb / t_bulk.dt,
+        "scalar_vectors_s": n_vec / scalar_s,
+        "bulk_vectors_s": n_vec / t_bulk.dt,
+        "speedup": scalar_s / t_bulk.dt,
+    }
+
+
+def main(small: bool = False, json_path: str | None = "BENCH_decode.json"
+         ) -> list[dict]:
+    rng = np.random.default_rng(0)
+    results = []
+    for name, net, idx, density in (SMALL_LAYERS if small else FULL_LAYERS):
+        code = build_code(net, idx, density, small=small, rng=rng)
+        r = bench_layer(name, code)
+        results.append(r)
+        print(csv_line(
+            f"decode_bulk_{name}", r["bulk_s"] / r["n_vectors"] * 1e6,
+            f"bulk_mb_s={r['bulk_mb_s']:.1f};"
+            f"bulk_vectors_s={r['bulk_vectors_s']:.0f};"
+            f"scalar_mb_s={r['scalar_mb_s']:.2f};"
+            f"speedup={r['speedup']:.1f}x"))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"benchmark": "decode", "small": small,
+                       "layers": results}, f, indent=2)
+    return results
+
+
+def cli(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="tiny layers (CI smoke run)")
+    ap.add_argument("--json", default="BENCH_decode.json",
+                    help="JSON output path ('' disables)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    main(small=args.small, json_path=args.json or None)
+
+
+if __name__ == "__main__":
+    cli()

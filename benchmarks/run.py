@@ -1,15 +1,15 @@
 """Benchmark harness — one module per paper table/figure plus the
 roofline report.  Prints ``name,us_per_call,derived`` CSV lines.
 
-  python -m benchmarks.run [--only fig6|fig7|fig8|kernels|roofline|engine]
+  python -m benchmarks.run [--only fig6|fig7|fig8|kernels|roofline|engine|decode]
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-from benchmarks import compression, energy, engine, kernels, roofline, \
-    sram_access
+from benchmarks import compression, decode, energy, engine, kernels, \
+    roofline, sram_access
 
 SUITES = {
     "fig6": compression.main,
@@ -18,6 +18,7 @@ SUITES = {
     "kernels": kernels.main,
     "roofline": roofline.main,
     "engine": engine.main,
+    "decode": decode.main,
 }
 
 

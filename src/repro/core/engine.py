@@ -115,8 +115,21 @@ def decode_tile(code: ucr.LayerCode, mt: int, *,
 
 def decode_all_tiles(code: ucr.LayerCode, *,
                      source: str = "bitstream") -> np.ndarray:
-    """All tiles, stacked: int8 ``(n_tiles, t_m, N, RK, CK)``."""
+    """All tiles, stacked: int8 ``(n_tiles, t_m, N, RK, CK)``.
+
+    The bitstream path decodes the whole layer in one vectorized pass
+    (:func:`repro.core.rle.decode_layer` — no per-vector Python loop);
+    :func:`decode_tile` stays as the per-tile scalar parity oracle.
+    """
     n_tiles = -(-code.shape[0] // code.t_m)
+    if source == "bitstream":
+        n = code.shape[1]
+        rk, ck = (code.shape[2], code.shape[3]) \
+            if len(code.shape) == 4 else (1, 1)
+        flat = rle.decode_layer(code, pad_to=code.t_m * rk * ck)
+        return np.ascontiguousarray(
+            flat.reshape(n_tiles, n, code.t_m, rk, ck)
+                .transpose(0, 2, 1, 3, 4))
     return np.stack([decode_tile(code, mt, source=source)
                      for mt in range(n_tiles)])
 
@@ -149,6 +162,8 @@ class CodrConv2D:
         self._tiles: np.ndarray | None = None  # decoded int8 tile cache
         self._tiles_dev: jax.Array | None = None
         self._forward = None                   # jitted dispatch cache
+        self._trace_count = 0                  # times the forward re-traced
+        self._smm_ops = None                   # packed SMM kernel operands
 
     # -- offline decode -----------------------------------------------------
     @property
@@ -161,7 +176,10 @@ class CodrConv2D:
     @property
     def tiles_device(self) -> jax.Array:
         if self._tiles_dev is None:
-            self._tiles_dev = jnp.asarray(self.tiles, jnp.float32)
+            # concrete even when first touched inside a jit trace (the
+            # model-level chain) — the cached buffer must never be a tracer
+            with jax.ensure_compile_time_eval():
+                self._tiles_dev = jnp.asarray(self.tiles, jnp.float32)
         return self._tiles_dev
 
     def decoded_weights(self) -> np.ndarray:
@@ -189,6 +207,13 @@ class CodrConv2D:
         return ConvShape(m, n, rk, ck, ri, ci, self.stride)
 
     # -- execution ----------------------------------------------------------
+    @property
+    def trace_count(self) -> int:
+        """Times the jitted forward was (re-)traced.  Compile-once
+        contract: one trace per distinct input shape, ever — repeat
+        requests hit the compile cache."""
+        return self._trace_count
+
     def _build_forward(self):
         scale = float(np.asarray(self.code.scale))
         m = self.code.shape[0]
@@ -196,31 +221,34 @@ class CodrConv2D:
         bias = None if self.bias is None else jnp.asarray(self.bias)
         act = self.activation
 
-        def tile_conv(x, wt):
-            # one output-stationary tile: all its outputs produced in one
-            # pass over the broadcast input
-            return jax.lax.conv_general_dilated(
-                x, wt, window_strides=stride, padding="VALID",
-                dimension_numbers=("NHWC", "OIHW", "NHWC"))
-
-        @jax.jit
         def forward(x, tiles_f32):
-            # (n_tiles, B, RO, CO, t_m): tiles dispatched in parallel, each
-            # writes its own output-channel slice exactly once
-            per_tile = jax.vmap(tile_conv, in_axes=(None, 0))(x, tiles_f32)
-            t, b, ro, co, tm = per_tile.shape
-            y = jnp.moveaxis(per_tile, 0, 3).reshape(b, ro, co, t * tm)
-            y = y[..., :m] * scale
+            self._trace_count += 1             # runs at trace time only
+            # tiles (n_tiles, t_m, N, RK, CK) fuse into ONE conv dispatch:
+            # the output-channel tiling stays the storage/SRAM format, and
+            # every tile's output-channel slice y[..., mt*t_m:(mt+1)*t_m]
+            # is still produced exactly once (output stationary) — but the
+            # MXU sees a single large conv instead of n_tiles tiny ones
+            t, tm = tiles_f32.shape[0], tiles_f32.shape[1]
+            w = tiles_f32.reshape(t * tm, *tiles_f32.shape[2:])[:m]
+            y = jax.lax.conv_general_dilated(
+                x, w, window_strides=stride, padding="VALID",
+                dimension_numbers=("NHWC", "OIHW", "NHWC")) * scale
             if bias is not None:
                 y = y + bias
             if act == "relu":
                 y = jax.nn.relu(y)
             return y
 
-        return forward
+        return jax.jit(forward)
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        """``x``: NHWC ``(B, RI, CI, N)`` float32 → ``(B, RO, CO, M)``."""
+        """``x``: NHWC ``(B, RI, CI, N)`` float32 → ``(B, RO, CO, M)``.
+
+        Compile-once: the jitted dispatch is built on first call and its
+        compile cache is keyed by input shape; the decoded tile buffer
+        lives on device once (:attr:`tiles_device`) and is reused by every
+        request — no per-request host→device traffic or re-tracing.
+        """
         if self._forward is None:
             self._forward = self._build_forward()
         return self._forward(jnp.asarray(x, jnp.float32), self.tiles_device)
@@ -235,13 +263,26 @@ class CodrConv2D:
             y = y + jnp.asarray(self.bias)
         return jax.nn.relu(y) if self.activation == "relu" else y
 
-    # faithful-mechanism execution (8-bit feature datapath, stride 1 for
-    # the Pallas kernel) — per sample scalar–matrix multiplies + routing
+    def smm_operands(self):
+        """Padded SMM kernel operands, packed once per layer and cached on
+        device — every dispatch (any batch size) reuses them."""
+        if self._smm_ops is None:
+            from repro.kernels.smm_conv import pack_smm_operands
+            deltas, entries, meta = pack_smm_operands(self.code,
+                                                      self.code.shape[1])
+            self._smm_ops = (jnp.asarray(deltas), jnp.asarray(entries), meta)
+        return self._smm_ops
+
+    # faithful-mechanism execution (8-bit feature datapath) — batched
+    # scalar–matrix multiplies + routing, whole batch in one dispatch
     def smm_forward(self, x: jax.Array, *, kernel: bool = False) -> jax.Array:
         """Run the differential SMM mechanism itself.  Activations go
         through the accelerator's 8-bit feature path: integer-valued
         inputs within int8 range run exactly; anything else is symmetric
-        int8-quantized first (its scale folds into the output)."""
+        int8-quantized first (its scale folds into the output).  Both
+        backends execute the whole batch at once — the Pallas kernel
+        batches via its grid, the NumPy path broadcasts the scalar–matrix
+        products over the batch axis."""
         xf = np.asarray(x, dtype=np.float32)
         if np.array_equal(xf, np.rint(xf)) and np.abs(xf).max() <= 127:
             xi, x_scale = xf.astype(np.int32), 1.0
@@ -250,18 +291,16 @@ class CodrConv2D:
             xi, x_scale = q8.astype(np.int32), float(np.asarray(s))
         scale = float(np.asarray(self.code.scale)) * x_scale
         if kernel:
-            if self.stride != 1:
-                raise NotImplementedError("smm kernel path is stride-1 only")
             from repro.kernels.smm_conv import smm_conv_batched
             y = smm_conv_batched(jnp.asarray(np.moveaxis(xi, 3, 1),
-                                             jnp.float32), self.code)
+                                             jnp.float32), self.code,
+                                 stride=self.stride,
+                                 operands=self.smm_operands())
             y = jnp.moveaxis(y, 1, 3) * scale
         else:
-            outs = [smm.conv2d_smm(np.moveaxis(xi[b], 2, 0), self.code,
-                                   self.stride)
-                    for b in range(xi.shape[0])]
-            y = jnp.asarray(np.moveaxis(np.stack(outs), 1, 3),
-                            jnp.float32) * scale
+            outs = smm.conv2d_smm_batched(np.moveaxis(xi, 3, 1), self.code,
+                                          self.stride)
+            y = jnp.asarray(np.moveaxis(outs, 1, 3), jnp.float32) * scale
         if self.bias is not None:
             y = y + jnp.asarray(self.bias)
         return jax.nn.relu(y) if self.activation == "relu" else y
@@ -290,6 +329,7 @@ class CodrLinear:
         self._tiles: np.ndarray | None = None
         self._tiles_dev: jax.Array | None = None
         self._forward = None
+        self._trace_count = 0
 
     @property
     def tiles(self) -> np.ndarray:
@@ -302,8 +342,9 @@ class CodrLinear:
     def tiles_device(self) -> jax.Array:
         if self._tiles_dev is None:         # (T, t_m, N), reshaped once
             t = self.tiles
-            self._tiles_dev = jnp.asarray(
-                t.reshape(t.shape[0], t.shape[1], -1), jnp.float32)
+            with jax.ensure_compile_time_eval():
+                self._tiles_dev = jnp.asarray(
+                    t.reshape(t.shape[0], t.shape[1], -1), jnp.float32)
         return self._tiles_dev
 
     def decoded_weights(self) -> np.ndarray:
@@ -319,28 +360,34 @@ class CodrLinear:
     def stats(self) -> LayerStats:
         return _layer_stats(self.name, self.kind, self.code)
 
+    @property
+    def trace_count(self) -> int:
+        return self._trace_count
+
     def _build_forward(self):
         scale = float(np.asarray(self.code.scale))
         m = self.code.shape[0]
         bias = None if self.bias is None else jnp.asarray(self.bias)
         act = self.activation
 
-        @jax.jit
         def forward(x, tiles_f32):
-            # (T, t_m, N) decoded tiles; each tile's outputs written once
-            per_tile = jax.vmap(lambda wt: x @ wt.T, in_axes=0)(tiles_f32)
-            t, b, tm = per_tile.shape
-            y = jnp.moveaxis(per_tile, 0, 1).reshape(b, t * tm)[:, :m] * scale
+            self._trace_count += 1             # runs at trace time only
+            # (T, t_m, N) decoded tiles fused into one matmul; each tile's
+            # output slice y[:, mt*t_m:(mt+1)*t_m] still written once
+            t, tm = tiles_f32.shape[0], tiles_f32.shape[1]
+            w = tiles_f32.reshape(t * tm, -1)[:m]
+            y = (x @ w.T) * scale
             if bias is not None:
                 y = y + bias
             if act == "relu":
                 y = jax.nn.relu(y)
             return y
 
-        return forward
+        return jax.jit(forward)
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        """``x``: ``(B, N)`` float32 → ``(B, M)``."""
+        """``x``: ``(B, N)`` float32 → ``(B, M)`` (compile-once, see
+        :meth:`CodrConv2D.__call__`)."""
         if self._forward is None:
             self._forward = self._build_forward()
         return self._forward(jnp.asarray(x, jnp.float32), self.tiles_device)
@@ -367,6 +414,7 @@ class CodrModel:
 
     def __init__(self, layers: Sequence[CodrConv2D | CodrLinear]):
         self.layers = list(layers)
+        self._run_tiled = None            # jitted whole-model chain cache
 
     def _chain(self, x: jax.Array, step) -> jax.Array:
         for layer in self.layers:
@@ -375,10 +423,28 @@ class CodrModel:
             x = step(layer, x)
         return x
 
+    @property
+    def trace_count(self) -> int:
+        """Total layer re-traces — flat across repeat same-shape calls."""
+        return sum(l.trace_count for l in self.layers)
+
+    def __call__(self, batch: jax.Array, *, backend: str = "tiled") -> jax.Array:
+        return self.run(batch, backend=backend)
+
     def run(self, batch: jax.Array, *, backend: str = "tiled") -> jax.Array:
-        """Forward an NHWC batch through the compressed model."""
+        """Forward an NHWC batch through the compressed model.
+
+        The ``tiled`` backend is compiled ONCE for the whole model: the
+        per-layer forwards inline into a single jitted chain (XLA fuses
+        across layer boundaries — no per-layer dispatch or host hops),
+        cached per input shape.  Repeat same-shape requests re-trace
+        nothing — see :attr:`trace_count`.
+        """
         if backend == "tiled":
-            return self._chain(batch, lambda l, x: l(x))
+            if self._run_tiled is None:
+                self._run_tiled = jax.jit(
+                    lambda x: self._chain(x, lambda l, xx: l(xx)))
+            return self._run_tiled(jnp.asarray(batch, jnp.float32))
         if backend in ("smm", "smm_kernel"):
             kern = backend == "smm_kernel"
 

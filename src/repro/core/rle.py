@@ -29,7 +29,8 @@ import math
 
 import numpy as np
 
-from repro.core.packing import BitReader, pack_varbits
+from repro.core.packing import (BitReader, escape_field_offsets_batch,
+                                gather_bitfields, pack_varbits)
 
 FULL_BITS = 8            # full-precision fallback width for int8 weight deltas
 HEADER_BITS = 32         # per-stream header: 4b param + 28b count (modelled)
@@ -306,6 +307,169 @@ def decode_vector(enc: EncodedVector) -> np.ndarray:
             weights[indexes[cursor]] = running
             cursor += 1
     return weights
+
+
+# ---------------------------------------------------------------------------
+# vectorized bulk decode — whole-layer, no per-field Python loop
+# ---------------------------------------------------------------------------
+
+def _stream_bits(streams) -> tuple[np.ndarray, np.ndarray]:
+    """Bit-level concatenation of many packed streams: one ``unpackbits``
+    over the joined payload bytes, then one gather dropping each stream's
+    byte-alignment slack.  Returns ``(bits, stream_bit_starts)``."""
+    allbits = np.unpackbits(
+        np.concatenate([np.asarray(s.packed, dtype=np.uint8)
+                        for s in streams]) if streams
+        else np.zeros(0, dtype=np.uint8), bitorder="little")
+    nbytes = np.array([len(s.packed) for s in streams], dtype=np.int64)
+    nbits = np.array([s.nbits for s in streams], dtype=np.int64)
+    starts = np.cumsum(nbits) - nbits
+    within = (np.arange(int(nbits.sum()), dtype=np.int64)
+              - np.repeat(starts, nbits))
+    idx = np.repeat((np.cumsum(nbytes) - nbytes) * 8, nbits) + within
+    return allbits[idx], starts
+
+
+def _flat_dest(field_start: np.ndarray, counts: np.ndarray,
+               idxs: list[int]) -> np.ndarray:
+    """Flat positions of the fields of streams ``idxs`` inside the
+    all-streams field order (stream-major)."""
+    sub_counts = counts[idxs]
+    total = int(sub_counts.sum())
+    within = (np.arange(total, dtype=np.int64)
+              - np.repeat(np.cumsum(sub_counts) - sub_counts, sub_counts))
+    return np.repeat(field_start[idxs], sub_counts) + within
+
+
+def _grouped_escape_decode(streams) -> tuple[np.ndarray, np.ndarray]:
+    """Decode many escape streams in one vectorized pass per parameter
+    group.  Streams sharing ``(param, mode_bits)`` — the common case, since
+    params are per layer (§III-C) — are concatenated at the bit level and
+    decoded together: field-start offsets from the lockstep cursor advance
+    of :func:`repro.core.packing.escape_field_offsets_batch`, payloads from
+    one shift/mask gather.
+
+    Returns ``(values, escaped)`` concatenated in stream order.
+    """
+    counts = np.array([s.count for s in streams], dtype=np.int64)
+    total = int(counts.sum())
+    values = np.zeros(total, dtype=np.int64)
+    escaped = np.zeros(total, dtype=bool)
+    if total == 0:
+        return values, escaped
+    field_start = np.cumsum(counts) - counts
+    groups: dict[tuple[int, int], list[int]] = {}
+    for si, s in enumerate(streams):
+        if s.count:
+            groups.setdefault((s.param, s.mode_bits), []).append(si)
+    for (param, mode), idxs in groups.items():
+        bits, starts = _stream_bits([streams[i] for i in idxs])
+        ends = starts + np.array([streams[i].nbits for i in idxs],
+                                 dtype=np.int64)
+        offsets = escape_field_offsets_batch(bits, starts, counts[idxs],
+                                             param + 1, mode + 1, ends)
+        flags = bits[offsets].astype(bool)
+        vals = gather_bitfields(bits, offsets + 1,
+                                np.where(flags, mode, param))
+        dest = _flat_dest(field_start, counts, idxs)
+        values[dest] = vals
+        escaped[dest] = flags
+    return values, escaped
+
+
+def _grouped_rep_decode(streams) -> np.ndarray:
+    """Decode many fixed-width repetition streams in one gather per
+    ``rep_bits`` group (field offsets are arithmetic)."""
+    counts = np.array([s.count for s in streams], dtype=np.int64)
+    total = int(counts.sum())
+    out = np.zeros(total, dtype=np.int64)
+    if total == 0:
+        return out
+    field_start = np.cumsum(counts) - counts
+    groups: dict[int, list[int]] = {}
+    for si, s in enumerate(streams):
+        if s.count:
+            groups.setdefault(s.param, []).append(si)
+    for param, idxs in groups.items():
+        bits, starts = _stream_bits([streams[i] for i in idxs])
+        nbits = np.array([streams[i].nbits for i in idxs], dtype=np.int64)
+        short = np.nonzero(counts[idxs] * param != nbits)[0]
+        if len(short):                       # truncated/corrupt rep stream
+            i = idxs[int(short[0])]
+            raise EOFError(
+                f"corrupt rep stream {i}: {int(counts[i])} x {param}-bit "
+                f"fields vs a {int(streams[i].nbits)}-bit payload")
+        within = _flat_dest(np.zeros_like(field_start), counts, idxs)
+        offsets = np.repeat(starts, counts[idxs]) + within * param
+        vals = gather_bitfields(bits, offsets, param) + 1
+        out[_flat_dest(field_start, counts, idxs)] = vals
+    return out
+
+
+def decode_layer(code, *, pad_to: int | None = None) -> np.ndarray:
+    """Decode every vector of a :class:`repro.core.ucr.LayerCode` in one
+    vectorized pass — the bulk counterpart of :func:`decode_vector` (which
+    stays as the parity oracle; tests assert bit-exact agreement).
+
+    Returns int8 ``(n_vectors, pad_to)``; row ``i`` equals
+    ``decode_vector(code.vectors[i])`` zero-padded to ``pad_to`` (default:
+    the layer's max ``vector_len``).  All three structures decode without
+    a per-field Python loop: escape streams via pointer-doubling offset
+    resolution + shift/mask gathers, repetition streams via one arithmetic
+    gather, running weights and Δ/absolute index mixes via segmented
+    cumulative sums, and the final placement via one fancy-indexed scatter.
+    """
+    vectors = code.vectors
+    n_vec = len(vectors)
+    max_len = max((v.vector_len for v in vectors), default=0)
+    if pad_to is None:
+        pad_to = max_len
+    elif pad_to < max_len:
+        raise ValueError(f"pad_to={pad_to} < max vector_len={max_len}")
+    out = np.zeros((n_vec, pad_to), dtype=np.int8)
+    if n_vec == 0:
+        return out
+
+    d_vals, _ = _grouped_escape_decode([v.deltas for v in vectors])
+    reps = _grouped_rep_decode([v.reps for v in vectors])
+    i_vals, i_esc = _grouped_escape_decode([v.indexes for v in vectors])
+
+    # running weight values: segmented cumsum over Δ fields (the first
+    # field of each vector carries the +128 bias, dummies are Δ=0)
+    n_unique = np.array([v.n_unique for v in vectors], dtype=np.int64)
+    cs = np.cumsum(d_vals)
+    if len(cs):
+        seg_first = np.cumsum(n_unique) - n_unique
+        base = np.where(seg_first > 0, cs[np.maximum(seg_first - 1, 0)], 0)
+        running = cs - np.repeat(base, n_unique) - 128
+    else:                                    # all-zero layer: no uniques
+        running = cs
+
+    # absolute indexes from the Δ/absolute mix: every vector's first index
+    # field is absolute (escaped), so a global "reset at last escape"
+    # segmented cumsum rebuilds all positions at once
+    n_idx = np.array([v.indexes.count for v in vectors], dtype=np.int64)
+    if len(i_vals):
+        if not i_esc[0]:
+            raise ValueError("corrupt index stream: first field not absolute")
+        pos = np.arange(len(i_vals), dtype=np.int64)
+        last_esc = np.maximum.accumulate(np.where(i_esc, pos, -1))
+        ics = np.cumsum(np.where(i_esc, 0, i_vals))
+        idx_abs = i_vals[last_esc] + ics - ics[last_esc]
+    else:
+        idx_abs = np.zeros(0, dtype=np.int64)
+
+    w_vals = np.repeat(running, reps)
+    row = np.repeat(np.arange(n_vec), n_idx)
+    out[row, idx_abs] = w_vals.astype(np.int8)
+    return out
+
+
+def decode_layer_vectors(code) -> list[np.ndarray]:
+    """Per-vector views of :func:`decode_layer`, each cropped to its true
+    ``vector_len`` (drop-in for a ``decode_vector`` loop)."""
+    padded = decode_layer(code)
+    return [padded[i, : v.vector_len] for i, v in enumerate(code.vectors)]
 
 
 def layer_params_search(ucr_vectors, vector_len: int) -> tuple[int, int, int]:

@@ -154,9 +154,17 @@ class CodrBatchServer:
     """Batched inference over a :class:`repro.core.engine.CodrModel`.
 
     Single-sample requests are queued and executed together in fixed-size
-    batches (padding the ragged tail), so every forward pass reuses the
-    one jitted tile-dispatch computation per layer — the serving-side
-    complement of the engine's encode-once/run-many contract.
+    batches, so every forward pass reuses the one jitted tile-dispatch
+    computation per layer — the serving-side complement of the engine's
+    encode-once/run-many contract.
+
+    Dispatch is **size-bucketed**: requests are grouped by sample shape,
+    and ragged tail batches are padded up to the next power-of-two bucket
+    (≤ ``max_batch``) rather than to arbitrary sizes.  A mixed-size
+    request stream therefore compiles at most ``len(shapes) ×
+    log2(max_batch)+1`` forward variants instead of one per distinct
+    ragged size — the compile cache stops thrashing while padding waste
+    stays bounded at <2x.
     """
 
     def __init__(self, model, *, max_batch: int = 8):
@@ -167,6 +175,13 @@ class CodrBatchServer:
         self._queue: list[np.ndarray] = []
         self.batches_run = 0
         self.requests_served = 0
+        self.bucket_counts: dict[int, int] = {}   # batch bucket → dispatches
+
+    def _bucket(self, n_real: int) -> int:
+        b = 1
+        while b < n_real:
+            b *= 2
+        return min(b, self.max_batch)
 
     def submit(self, x: np.ndarray) -> int:
         """Queue one sample (no batch dim).  Returns its request id."""
@@ -175,17 +190,26 @@ class CodrBatchServer:
 
     def flush(self) -> list[np.ndarray]:
         """Run all queued requests; returns outputs in submission order."""
-        outs: list[np.ndarray] = []
-        while self._queue:
-            chunk = self._queue[: self.max_batch]
-            del self._queue[: len(chunk)]
-            n_real = len(chunk)
-            if n_real < self.max_batch:      # pad → constant batch shape,
-                chunk = chunk + [chunk[-1]] * (self.max_batch - n_real)
-            y = np.asarray(self.model.run(jnp.asarray(np.stack(chunk))))
-            outs.extend(y[:n_real])
-            self.batches_run += 1
-            self.requests_served += n_real
+        outs: list[np.ndarray | None] = [None] * len(self._queue)
+        by_shape: dict[tuple, list[int]] = {}
+        for pos, x in enumerate(self._queue):
+            by_shape.setdefault(x.shape, []).append(pos)
+        queue, self._queue = self._queue, []
+        for positions in by_shape.values():
+            for i in range(0, len(positions), self.max_batch):
+                chunk_pos = positions[i : i + self.max_batch]
+                chunk = [queue[p] for p in chunk_pos]
+                n_real = len(chunk)
+                bucket = self._bucket(n_real)
+                if n_real < bucket:          # pad → bucketed batch shape
+                    chunk = chunk + [chunk[-1]] * (bucket - n_real)
+                y = np.asarray(self.model.run(jnp.asarray(np.stack(chunk))))
+                for p, row in zip(chunk_pos, y[:n_real]):
+                    outs[p] = row
+                self.batches_run += 1
+                self.requests_served += n_real
+                self.bucket_counts[bucket] = \
+                    self.bucket_counts.get(bucket, 0) + 1
         return outs
 
     def serve(self, samples) -> list[np.ndarray]:

@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.core.ucr import LayerCode, UCRVector
 
-__all__ = ["conv2d_smm", "linear_smm", "conv2d_dense_ref", "decode_index"]
+__all__ = ["conv2d_smm", "conv2d_smm_batched", "linear_smm",
+           "conv2d_dense_ref", "decode_index"]
 
 
 def decode_index(flat_idx: int, kernel_shape: tuple[int, int]) -> tuple[int, int, int]:
@@ -52,11 +53,24 @@ def conv2d_smm(x: np.ndarray, code: LayerCode, stride: int = 1) -> np.ndarray:
     Returns int64 accumulations (pre-activation), identical to the dense
     oracle — computation reuse changes *work*, not results.
     """
+    return conv2d_smm_batched(x[None], code, stride)[0]
+
+
+def conv2d_smm_batched(x: np.ndarray, code: LayerCode,
+                       stride: int = 1) -> np.ndarray:
+    """Batched CoDR execution: ``x`` (B, N, R_I, C_I) → (B, M, RO, CO).
+
+    No per-sample Python loop — every scalar–matrix product and every
+    routed window broadcasts over the batch axis, so the MPE/APE work per
+    unique weight is shared by the whole batch (the software analogue of
+    the accelerator streaming a feature batch through one weight decode).
+    """
+    x = np.asarray(x)
     m, n = code.shape[0], code.shape[1]
     rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
-    _, ri, ci = x.shape
+    b, _, ri, ci = x.shape
     ro, co = (ri - rk) // stride + 1, (ci - ck) // stride + 1
-    out = np.zeros((m, ro, co), dtype=np.int64)
+    out = np.zeros((b, m, ro, co), dtype=np.int64)
 
     vec_iter = iter(zip(code.vectors, code.ucr))
     n_tiles_n = -(-n // code.t_n)
@@ -65,16 +79,18 @@ def conv2d_smm(x: np.ndarray, code: LayerCode, stride: int = 1) -> np.ndarray:
             n0 = n0idx * code.t_n
             for nn in range(n0, min(n0 + code.t_n, n)):
                 _, u = next(vec_iter)
-                _smm_one_vector(out, x[nn], u, m0, (rk, ck), ro, co, stride)
+                _smm_one_vector(out, x[:, nn], u, m0, (rk, ck), ro, co,
+                                stride)
     return out
 
 
-def _smm_one_vector(out, x_plane, u: UCRVector, m0, kshape, ro, co, stride):
+def _smm_one_vector(out, x_planes, u: UCRVector, m0, kshape, ro, co, stride):
     """One MPE pass: running Δ-sum over unique weights; scalar × matrix;
-    per-repetition window routed to APE ``m0 + m_local``."""
+    per-repetition window routed to APE ``m0 + m_local``.  ``x_planes`` is
+    the batched input plane (B, R_I, C_I); all products broadcast over B."""
     running = np.int64(0)
     cursor = 0
-    x_plane = x_plane.astype(np.int64)
+    x_planes = x_planes.astype(np.int64)
     prev_product = None
     for val, rep in zip(u.unique_vals, u.reps):
         delta = np.int64(val) - running
@@ -82,14 +98,14 @@ def _smm_one_vector(out, x_plane, u: UCRVector, m0, kshape, ro, co, stride):
         # differential computation (Eq. 1): Δ × I + previous product.
         # bit-exact with running × I since int arithmetic is associative.
         if prev_product is None:
-            product = running * x_plane
+            product = running * x_planes
         else:
-            product = delta * x_plane + prev_product
+            product = delta * x_planes + prev_product
         prev_product = product
         for idx in u.indexes[cursor : cursor + int(rep)]:
             m_local, r, c = decode_index(int(idx), kshape)
-            out[m0 + m_local] += product[r : r + stride * ro : stride,
-                                         c : c + stride * co : stride]
+            out[:, m0 + m_local] += product[:, r : r + stride * ro : stride,
+                                            c : c + stride * co : stride]
         cursor += int(rep)
 
 

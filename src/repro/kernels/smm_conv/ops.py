@@ -45,31 +45,51 @@ def pack_smm_operands(code: LayerCode, n_in: int
                              "u_max": u_max, "l_max": l_max}
 
 
-def smm_conv_batched(x: jax.Array, code: LayerCode, *,
-                     interpret: bool | None = None) -> jax.Array:
+def smm_conv_batched(x: jax.Array, code: LayerCode, *, stride: int = 1,
+                     interpret: bool | None = None,
+                     operands: tuple | None = None) -> jax.Array:
     """Batched CoDR SMM convolution: ``x`` (B, N, RI, CI) → (B, M, RO, CO).
 
-    Operands are packed once; every sample reuses the same jitted Pallas
-    call (static shapes → one compile), the engine's encode-once/run-many
-    contract at the kernel level.
+    The whole batch runs in ONE Pallas dispatch (batch = leading grid
+    dimension — no per-sample Python loop).  Pass ``operands`` (the
+    ``(deltas, entries, meta)`` triple from :func:`pack_smm_operands`,
+    device arrays) to reuse a layer's packed operands across calls — the
+    engine caches them per layer; otherwise they are packed here.
+
+    ``stride`` is routed into the kernel as strided crossbar window loads.
+    Should a backend reject that lowering (Pallas cannot express strided
+    dynamic slices everywhere), the call falls back to the reference SMM
+    implementation (:func:`repro.core.smm.conv2d_smm_batched` — bit-exact,
+    slower).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
     _, n_in, ri, ci = x.shape
     rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
-    ro, co = ri - rk + 1, ci - ck + 1
-    deltas, entries, meta = pack_smm_operands(code, n_in)
-    deltas_j, entries_j = jnp.asarray(deltas), jnp.asarray(entries)
-    outs = [smm_conv_pallas(jnp.asarray(x[b], jnp.float32), deltas_j,
-                            entries_j, t_m=meta["t_m"], ro=ro, co=co,
-                            interpret=interpret)[: code.shape[0]]
-            for b in range(x.shape[0])]
-    return jnp.stack(outs)
+    ro, co = (ri - rk) // stride + 1, (ci - ck) // stride + 1
+    if operands is None:
+        deltas, entries, meta = pack_smm_operands(code, n_in)
+        deltas, entries = jnp.asarray(deltas), jnp.asarray(entries)
+    else:
+        deltas, entries, meta = operands
+    try:
+        y = smm_conv_pallas(jnp.asarray(x, jnp.float32), deltas, entries,
+                            t_m=meta["t_m"], ro=ro, co=co, stride=stride,
+                            interpret=interpret)
+    except NotImplementedError:
+        from repro.core.smm import conv2d_smm_batched
+        y = jnp.asarray(conv2d_smm_batched(
+            np.rint(np.asarray(x)).astype(np.int64), code, stride),
+            jnp.float32)
+    return y[:, : code.shape[0]]
 
 
-def smm_conv(x: jax.Array, code: LayerCode, *,
+def smm_conv(x: jax.Array, code: LayerCode, *, stride: int = 1,
              interpret: bool | None = None) -> jax.Array:
     """CoDR SMM convolution of ``x`` (N, RI, CI) with an encoded layer.
     Returns pre-activation int-exact accumulations (float32), cropped to
     the true output-channel count."""
-    return smm_conv_batched(x[None], code, interpret=interpret)[0]
+    return smm_conv_batched(x[None], code, stride=stride,
+                            interpret=interpret)[0]

@@ -22,7 +22,8 @@ def decode_dense_weights(code: LayerCode, n_in: int) -> np.ndarray:
     return w[:m]
 
 
-def smm_conv_ref(x: np.ndarray, code: LayerCode) -> jnp.ndarray:
+def smm_conv_ref(x: np.ndarray, code: LayerCode,
+                 stride: int = 1) -> jnp.ndarray:
     """Dense conv oracle via jax.lax.conv (float32, exact for int8 ranges)."""
     import jax.lax as lax
     n_in = x.shape[0]
@@ -30,6 +31,6 @@ def smm_conv_ref(x: np.ndarray, code: LayerCode) -> jnp.ndarray:
     xf = jnp.asarray(x, jnp.float32)[None]                  # (1, N, RI, CI)
     wf = jnp.asarray(w)                                     # (M, N, RK, CK)
     out = lax.conv_general_dilated(
-        xf, wf, window_strides=(1, 1), padding="VALID",
+        xf, wf, window_strides=(stride, stride), padding="VALID",
         dimension_numbers=("NCHW", "OIHW", "NCHW"))
     return out[0]

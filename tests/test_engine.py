@@ -177,6 +177,47 @@ def test_batch_server_matches_direct_run_and_orders_results(rng):
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+def test_model_compile_once_no_retrace_on_repeat_shapes(rng):
+    """Compile-once regression: a second ``CodrModel.__call__`` with the
+    same input shape must not re-trace any layer forward (traced-fn
+    counters); a new shape re-traces each layer exactly once."""
+    shapes = [ConvShape(6, 3, 3, 3, 10, 10, 1)]
+    model = build_random_model(shapes, n_out=4, density=0.5, rng=rng)
+    x = rng.normal(size=(2, 10, 10, 3)).astype(np.float32)
+    model(x)
+    first = model.trace_count
+    assert first == len(model.layers)          # one trace per layer
+    for _ in range(3):
+        model(x)
+    assert model.trace_count == first          # cache hit, no re-trace
+    model(rng.normal(size=(5, 10, 10, 3)).astype(np.float32))
+    assert model.trace_count == 2 * first      # new batch shape: one more
+    model(x)
+    assert model.trace_count == 2 * first      # old shape still cached
+
+
+def test_batch_server_buckets_mixed_size_requests(rng):
+    """Mixed-shape request streams: outputs stay in submission order and
+    a repeat stream compiles nothing new (size-bucketed dispatch)."""
+    w = _sparse_weights(rng, (4, 2, 3, 3), density=0.5)
+    model = CodrModel([CodrConv2D(w, t_m=2, activation="relu")])
+    server = CodrBatchServer(model, max_batch=4)
+    xs = [rng.normal(size=(10, 10, 2)).astype(np.float32) for _ in range(5)] \
+        + [rng.normal(size=(12, 12, 2)).astype(np.float32) for _ in range(3)]
+    order = rng.permutation(len(xs))
+    outs = server.serve([xs[i] for i in order])
+    assert len(outs) == len(xs)
+    for got, i in zip(outs, order):
+        want = np.asarray(model.run(jnp.asarray(xs[i][None])))[0]
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # 5 same-shape → batches of 4+1; 3 of the other shape → one bucket-4
+    assert server.batches_run == 3
+    assert set(server.bucket_counts) <= {1, 2, 4}
+    traces = model.trace_count
+    server.serve([xs[i] for i in order])       # identical stream again
+    assert model.trace_count == traces         # no compile-cache thrash
+
+
 def test_batch_server_incremental_submit(rng):
     shapes = [ConvShape(4, 2, 2, 2, 6, 6, 1)]
     model = build_random_model(shapes, n_out=3, density=0.8, rng=rng)

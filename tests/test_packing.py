@@ -1,0 +1,125 @@
+"""Bit-packing primitives and the vectorized bulk decoder — deterministic
+tests (no hypothesis dependency; the property-based variants live in
+``tests/test_rle.py``)."""
+import numpy as np
+import pytest
+
+from repro.core import rle, ucr
+from repro.core.packing import (BitReader, escape_field_offsets,
+                                escape_field_offsets_batch, gather_bitfields,
+                                pack_varbits, unpack_bits)
+
+
+def test_bitreader_read_many_matches_sequential_reads():
+    rng = np.random.default_rng(3)
+    widths = rng.integers(0, 14, size=200)
+    vals = rng.integers(0, 2**13, size=200).astype(np.uint64) \
+        & ((np.uint64(1) << widths.astype(np.uint64)) - np.uint64(1))
+    packed, nbits = pack_varbits(vals, widths)
+    bulk = BitReader(packed, nbits).read_many(widths)
+    seq = BitReader(packed, nbits)
+    assert [int(v) for v in bulk] == [seq.read(int(w)) for w in widths]
+
+
+def test_bitreader_overrun_raises_clear_error():
+    packed, nbits = pack_varbits(np.array([5], dtype=np.uint64),
+                                 np.array([3]))
+    r = BitReader(packed, nbits)
+    with pytest.raises(EOFError, match="overruns the 3-bit payload"):
+        r.read(4)
+    r2 = BitReader(packed, nbits)
+    with pytest.raises(EOFError, match="bulk read"):
+        r2.read_many([2, 2])
+    assert r2.pos == 0                     # failed bulk read moves nothing
+    assert r2.read_many([2, 1]).tolist() == [1, 1]   # 5 = 0b101 LSB-first
+
+
+def test_gather_bitfields_overrun_and_zero_width():
+    bits = unpack_bits(*pack_varbits(np.array([3], np.uint64),
+                                     np.array([2])))
+    assert gather_bitfields(bits, np.array([0]), np.array([2]))[0] == 3
+    assert gather_bitfields(bits, np.array([0]), np.array([0]))[0] == 0
+    with pytest.raises(EOFError):
+        gather_bitfields(bits, np.array([1]), np.array([2]))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_field_offset_resolvers_agree(seed):
+    """The O(log n) pointer-doubling resolver and the lockstep batch
+    resolver find identical field starts on real escape streams."""
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-128, 128, size=200).astype(np.int8)
+    w[rng.random(200) > rng.uniform(0.05, 1.0)] = 0
+    u = ucr.ucr_transform(w)
+    enc = rle.encode_vector(u.unique_vals, u.reps, u.indexes, u.vector_len)
+    for s in (enc.deltas, enc.indexes):
+        if s.count == 0:
+            continue
+        bits = unpack_bits(s.packed, s.nbits)
+        doubling = escape_field_offsets(bits, s.count, s.param + 1,
+                                        s.mode_bits + 1)
+        lockstep = escape_field_offsets_batch(
+            bits, np.array([0]), np.array([s.count]), s.param + 1,
+            s.mode_bits + 1)
+        assert np.array_equal(doubling, lockstep)
+
+
+def test_decode_layer_rejects_truncated_streams():
+    """A truncated payload must raise EOFError, not bleed into the next
+    stream's bits (the scalar BitReader guarantee, kept by the bulk
+    path)."""
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(8, 4, 3, 3)).astype(np.float32)
+    w[rng.random(w.shape) > 0.5] = 0
+    code = ucr.encode_conv_layer(w, t_m=4, t_n=2)
+    import dataclasses
+    victim = code.vectors[1]
+    code.vectors[1] = dataclasses.replace(
+        victim, deltas=dataclasses.replace(
+            victim.deltas, nbits=victim.deltas.nbits - 1))
+    with pytest.raises(EOFError, match="corrupt stream 1"):
+        rle.decode_layer(code)
+    code.vectors[1] = dataclasses.replace(
+        victim, reps=dataclasses.replace(
+            victim.reps, nbits=victim.reps.nbits - 1))
+    with pytest.raises(EOFError, match="corrupt rep stream 1"):
+        rle.decode_layer(code)
+
+
+@pytest.mark.parametrize("shape,density,t_m,t_n", [
+    ((8, 4, 3, 3), 0.3, 4, 2),
+    ((5, 3, 2, 2), 0.05, 4, 2),
+    ((16, 2, 1, 1), 1.0, 4, 2),
+    ((10, 3, 3, 3), 0.6, 4, 4),
+    ((24, 16, 1, 1), 0.5, 8, 1),
+    ((4, 2, 3, 3), 0.0, 4, 2),          # all-zero layer
+])
+def test_decode_layer_matches_scalar_decoder(shape, density, t_m, t_n):
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=shape).astype(np.float32) * 0.5
+    w[rng.random(shape) > density] = 0
+    code = ucr.encode_conv_layer(w, t_m=t_m, t_n=t_n)
+    bulk = rle.decode_layer(code)
+    for i, v in enumerate(code.vectors):
+        assert np.array_equal(bulk[i, : v.vector_len], rle.decode_vector(v))
+        assert not bulk[i, v.vector_len:].any()
+
+
+def test_decode_layer_mixed_per_vector_params():
+    """Bulk decode handles vectors encoded WITHOUT shared layer params
+    (per-vector search → mixed parameter groups in one layer)."""
+    rng = np.random.default_rng(1)
+    w = rng.integers(-128, 128, size=60).astype(np.int8)
+    w[rng.random(60) > 0.5] = 0
+    u = ucr.ucr_transform(w)
+    encs = [rle.encode_vector(u.unique_vals, u.reps, u.indexes, u.vector_len),
+            rle.encode_vector(u.unique_vals, u.reps, u.indexes, u.vector_len,
+                              params=(1, 1, 1)),
+            rle.encode_vector(u.unique_vals, u.reps, u.indexes, u.vector_len,
+                              params=(8, 8, 8))]
+
+    class _Code:
+        vectors = encs
+
+    for dec in rle.decode_layer_vectors(_Code):
+        assert np.array_equal(dec, w)

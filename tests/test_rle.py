@@ -79,6 +79,48 @@ def test_index_stream_absolute_fallback():
     assert rebuilt == list(idx)
 
 
+# ---------------------------------------------------------------------------
+# vectorized bulk decoder == scalar oracle, bit-exact
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 12), st.integers(1, 6), st.integers(1, 3),
+       st.integers(1, 3), st.integers(1, 8), st.integers(1, 4),
+       st.floats(0.0, 1.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_decode_layer_matches_scalar_decoder(m, n, rk, ck, t_m, t_n,
+                                             density, seed):
+    """decode_layer (vectorized) must reproduce decode_vector bit-exactly
+    for every vector, across shapes, tilings, and sparsities (which drive
+    the searched per-layer params through their whole range)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, n, rk, ck)).astype(np.float32)
+    w[rng.random(w.shape) > density] = 0
+    code = ucr.encode_conv_layer(w, t_m=t_m, t_n=t_n)
+    bulk = rle.decode_layer(code)
+    for i, v in enumerate(code.vectors):
+        assert np.array_equal(bulk[i, : v.vector_len], rle.decode_vector(v))
+        assert not bulk[i, v.vector_len :].any()       # padding stays zero
+
+
+@given(weight_vectors(max_len=256))
+@settings(max_examples=60, deadline=None)
+def test_decode_layer_per_vector_params(vals):
+    """Bulk decode also handles vectors encoded WITHOUT shared layer
+    params (per-vector search → mixed parameter groups)."""
+    w = np.array(vals, dtype=np.int8)
+    u = ucr.ucr_transform(w)
+    encs = [rle.encode_vector(u.unique_vals, u.reps, u.indexes, u.vector_len),
+            rle.encode_vector(u.unique_vals, u.reps, u.indexes, u.vector_len,
+                              params=(1, 1, 1))]
+
+    class _Code:
+        vectors = encs
+
+    got = rle.decode_layer_vectors(_Code)
+    for dec in got:
+        assert np.array_equal(dec, w)
+
+
 @pytest.mark.parametrize("density", [0.05, 0.3, 0.9])
 @pytest.mark.parametrize("n_unique", [4, 16, 256])
 def test_compression_improves_with_sparsity_and_repetition(density, n_unique):

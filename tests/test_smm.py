@@ -25,6 +25,21 @@ def test_conv_smm_equals_dense(shape, density, rng):
     assert np.array_equal(ref, got)
 
 
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_smm_batched_equals_dense(stride, rng):
+    """The batched SMM path (products broadcast over the batch axis — no
+    per-sample Python loop) matches the dense oracle per sample."""
+    w = rng.normal(size=(6, 2, 3, 3)).astype(np.float32)
+    w[rng.random(w.shape) > 0.5] = 0
+    code = ucr.encode_conv_layer(w, t_m=2, t_n=2)
+    q, _ = ucr.quantize_int8(w)
+    x = rng.integers(-8, 8, size=(4, 2, 11, 11)).astype(np.int32)
+    got = smm.conv2d_smm_batched(x, code, stride)
+    for b in range(4):
+        assert np.array_equal(
+            got[b], smm.conv2d_dense_ref(x[b].astype(np.int64), q, stride))
+
+
 def test_linear_smm_equals_matmul(rng):
     w = rng.normal(size=(48, 32)).astype(np.float32)
     w[rng.random(w.shape) < 0.6] = 0
