@@ -7,11 +7,28 @@ checkpoints ship offline; DESIGN.md notes the substitution: ratios, not
 absolute rates, are the reproduction target)."""
 from __future__ import annotations
 
+import subprocess
 import time
 
 import numpy as np
 
 from repro.core import ucr
+
+
+def bench_meta(**extra) -> dict:
+    """Provenance stamp for ``BENCH_*.json`` trajectories: the git SHA
+    the numbers were measured at plus any benchmark-specific metadata
+    (e.g. the encode config), so points stay comparable PR over PR."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=5, check=True).stdout.strip()
+    except Exception:                                 # noqa: BLE001
+        sha = "unknown"
+    meta = {"git_sha": sha,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z")}
+    meta.update(extra)
+    return meta
 
 
 def make_weights(shape, *, density: float, n_unique: int, rng) -> np.ndarray:

@@ -19,12 +19,12 @@ import sys
 import numpy as np
 
 try:
-    from benchmarks.common import Timer, csv_line
+    from benchmarks.common import Timer, bench_meta, csv_line
 except ImportError:                                   # run as a script
     import os
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
-    from benchmarks.common import Timer, csv_line
+    from benchmarks.common import Timer, bench_meta, csv_line
 
 from repro.core import rle, ucr
 
@@ -99,6 +99,7 @@ def main(small: bool = False, json_path: str | None = "BENCH_decode.json"
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"benchmark": "decode", "small": small,
+                       "meta": bench_meta(t_m=4, t_n=4),
                        "layers": results}, f, indent=2)
     return results
 

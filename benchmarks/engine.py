@@ -3,12 +3,14 @@ plus per-layer SRAM-access estimates from the dataflow model.
 
   PYTHONPATH=src python benchmarks/engine.py [--small] [--batch B]
 
-Reports the offline bitstream decode (now the vectorized bulk decoder),
-the one-time compile, and the steady-state (post-compile) throughput as
-separate numbers — the engine's compile-once contract makes the last one
-the serving-relevant figure.  CSV lines (the harness format):
-``name,us_per_call,derived``; a JSON summary (default
-``BENCH_engine.json``) tracks the trajectory PR over PR.
+Exercises the spec → compile → serve API (``repro.api``): a declarative
+``ModelSpec`` on paper-CNN geometry is compiled once under an explicit
+``EncodeConfig``, then driven through the offline bitstream decode, the
+one-time compile, the steady-state (post-compile) forward — the
+serving-relevant figure — and the batched request path.  CSV lines (the
+harness format): ``name,us_per_call,derived``; the JSON summary (default
+``BENCH_engine.json``) is stamped with the git SHA and the encode-config
+metadata so the perf trajectory stays comparable PR over PR.
 """
 from __future__ import annotations
 
@@ -19,66 +21,69 @@ import sys
 import numpy as np
 
 try:
-    from benchmarks.common import Timer, csv_line
+    from benchmarks.common import Timer, bench_meta, csv_line
 except ImportError:                                   # run as a script
     import os
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
-    from benchmarks.common import Timer, csv_line
+    from benchmarks.common import Timer, bench_meta, csv_line
 
-from repro.core.engine import build_random_model, paper_model_shapes
-from repro.core.serving import CodrBatchServer
+import repro.api as codr
 
 
-def build(small: bool):
-    """conv → conv → linear model on paper-CNN channel geometry."""
+def build(small: bool) -> tuple[codr.CompiledModel, tuple[int, int]]:
+    """conv → conv → linear compiled model on paper-CNN channel
+    geometry, encoded once under the benchmark's EncodeConfig."""
     rng = np.random.default_rng(0)
     if small:
-        shapes = paper_model_shapes("vgg16", n_conv=2, ri=20, ci=20)
-        hw, n_out = (20, 20), 10
+        spec = codr.ModelSpec.from_paper_cnn("vgg16", n_conv=2, ri=20,
+                                             ci=20, n_out=10, density=0.4,
+                                             rng=rng)
+        hw = (20, 20)
     else:
-        shapes = paper_model_shapes("alexnet", n_conv=2, ri=67, ci=67)
-        hw, n_out = (67, 67), 100
+        spec = codr.ModelSpec.from_paper_cnn("alexnet", n_conv=2, ri=67,
+                                             ci=67, n_out=100, density=0.4,
+                                             rng=rng)
+        hw = (67, 67)
     # the real bitstream decode path — the vectorized bulk decoder makes
-    # it cheap enough to benchmark end-to-end (it used to need the "ucr"
-    # shortcut source)
-    model = build_random_model(shapes, n_out=n_out, density=0.4, rng=rng,
-                               decode_source="bitstream")
-    return model, hw
+    # it cheap enough to benchmark end-to-end
+    config = codr.EncodeConfig(decode_source="bitstream")
+    return codr.compile(spec, config), hw
 
 
 def main(small: bool = False, batch: int = 8, iters: int = 5,
          json_path: str | None = "BENCH_engine.json") -> dict:
-    model, hw = build(small)
+    compiled, hw = build(small)
+    model = compiled.model
     rng = np.random.default_rng(1)
-    x = rng.normal(size=(batch, *hw, model.layers[0].code.shape[1])
-                   ).astype(np.float32)
+    n_in = model.layers[0].code.shape[1]
+    x = rng.normal(size=(batch, *hw, n_in)).astype(np.float32)
 
     with Timer() as t_dec:                     # offline bitstream decode
         for layer in model.layers:             # (bulk decoder, once ever)
             _ = layer.tiles
     with Timer() as t_compile:                 # compile + first dispatch
-        np.asarray(model.run(x))
+        np.asarray(compiled.run(x))
 
     with Timer() as t_run:                     # steady state (post-compile)
         for _ in range(iters):
-            y = model.run(x)
+            y = compiled.run(x)
         y.block_until_ready()
     us = t_run.dt / iters * 1e6
     imgs_s = batch * iters / t_run.dt
     print(csv_line("engine_decode", t_dec.dt * 1e6,
-                   f"bits={sum(l.code.total_bits for l in model.layers)};"
+                   f"bits={compiled.total_bits()};"
                    f"decode_s={t_dec.dt:.4f}"))
     print(csv_line("engine_compile", t_compile.dt * 1e6,
-                   f"traces={model.trace_count}"))
+                   f"traces={compiled.trace_count}"))
     print(csv_line("engine_forward", us,
                    f"imgs_per_s={imgs_s:.1f};batch={batch};"
-                   f"bits_per_weight={model.bits_per_weight():.2f};"
+                   f"bits_per_weight={compiled.bits_per_weight():.2f};"
                    f"steady_state=post_compile"))
 
-    server = CodrBatchServer(model, max_batch=batch)
-    samples = [rng.normal(size=(*hw, model.layers[0].code.shape[1])
-                          ).astype(np.float32) for _ in range(batch + 3)]
+    server = compiled.serve(max_batch=batch)
+    samples = [rng.normal(size=(*hw, n_in)).astype(np.float32)
+               for _ in range(batch + 3)]
     server.serve(samples)                      # warm the size buckets
     batches_before = server.batches_run
     with Timer() as t_srv:
@@ -88,7 +93,7 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
                    f"batches={server.batches_run - batches_before};"
                    f"buckets={len(server.bucket_counts)}"))
 
-    for name, acc in model.sram_report(hw):
+    for name, acc in compiled.sram_report(hw):
         print(csv_line(f"engine_sram_{name}", 0.0,
                        f"total_sram={acc.total_sram:.0f};"
                        f"feature_sram={acc.feature_sram:.0f};"
@@ -96,13 +101,15 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
 
     result = {
         "benchmark": "engine", "small": small, "batch": batch,
+        "meta": bench_meta(encode_config=compiled.config.metadata(),
+                           backend=compiled.backend.name),
         "decode_s": t_dec.dt,
         "compile_s": t_compile.dt,
         "steady_us_per_call": us,
         "imgs_per_s": imgs_s,
         "serve_us_per_request": t_srv.dt / len(outs) * 1e6,
-        "bits_per_weight": model.bits_per_weight(),
-        "trace_count": model.trace_count,
+        "bits_per_weight": compiled.bits_per_weight(),
+        "trace_count": compiled.trace_count,
     }
     if json_path:
         with open(json_path, "w") as f:

@@ -2,6 +2,12 @@
 roofline report.  Prints ``name,us_per_call,derived`` CSV lines.
 
   python -m benchmarks.run [--only fig6|fig7|fig8|kernels|roofline|engine|decode]
+                           [--small]
+
+``--small`` runs the size-aware suites (engine — the spec→compile→serve
+API path — and decode) in their CI smoke configuration; the CI workflow
+uses it so every PR appends a comparable, SHA-stamped point to the
+``BENCH_*.json`` perf trajectories.
 """
 from __future__ import annotations
 
@@ -20,18 +26,25 @@ SUITES = {
     "engine": engine.main,
     "decode": decode.main,
 }
+SMALL_AWARE = {"engine", "decode"}     # mains accepting a small= kwarg
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=list(SUITES), default=None)
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke sizes for the suites that support it "
+                         f"({', '.join(sorted(SMALL_AWARE))})")
     args = ap.parse_args(argv)
     suites = {args.only: SUITES[args.only]} if args.only else SUITES
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites.items():
         try:
-            fn()
+            if args.small and name in SMALL_AWARE:
+                fn(small=True)
+            else:
+                fn()
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},0.00,ERROR:{type(e).__name__}:{e}",

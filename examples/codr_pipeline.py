@@ -6,19 +6,19 @@
 
 plus compression vs the SCNN/UCNN baselines, the dataflow's SRAM
 access / energy accounting (paper Figs. 6–8 in miniature), and the
-batched multi-layer inference engine (conv → conv → linear) serving
-requests from the compressed code.
+spec → compile → serve engine API (``repro.api``): a declarative
+conv → conv → linear ModelSpec compiled once into a CompiledModel that
+serves batched requests from the compressed code.
 
     PYTHONPATH=src python examples/codr_pipeline.py
 """
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as codr
 from repro.core import cost_model, dataflow, rle, ucr
 from repro.core.baselines import scnn_compress_bits, ucnn_compress_bits
 from repro.core.dataflow import CODR_TILING, SCNN_TILING, UCNN_TILING, ConvShape
-from repro.core.engine import build_random_model
-from repro.core.serving import CodrBatchServer
 from repro.kernels.smm_conv import smm_conv, smm_conv_ref
 
 
@@ -76,23 +76,25 @@ def main() -> None:
               f"[dram {e.dram_uj:.1f} | sram {e.sram_uj:.1f} | "
               f"alu {e.alu_uj:.1f}]")
 
-    # -- batched multi-layer engine (encode once, run many) -----------------
-    model = build_random_model(
+    # -- spec → compile → serve (encode once, run many) ---------------------
+    spec = codr.ModelSpec.from_shapes(
         [ConvShape(16, 3, 3, 3, 16, 16, 1), ConvShape(24, 16, 3, 3, 14, 14, 1)],
         n_out=10, density=0.4, rng=rng)
-    model.verify_roundtrip()
+    compiled = codr.compile(spec, codr.EncodeConfig(), backend="tiled")
+    compiled.verify_roundtrip()
     x = rng.normal(size=(8, 16, 16, 3)).astype(np.float32)
-    y = model.run(x)
-    yr = model.reference(x)
+    y = compiled.run(x)
+    yr = compiled.reference(x)
     rel = float(jnp.abs(y - yr).max() / (jnp.abs(yr).max() + 1e-9))
     print(f"  engine conv→conv→linear on batch {x.shape[0]}: out {y.shape}, "
-          f"{model.bits_per_weight():.2f} bits/weight, "
-          f"rel err vs dense float ref = {rel:.4f}")
-    server = CodrBatchServer(model, max_batch=4)
+          f"{compiled.bits_per_weight():.2f} bits/weight, "
+          f"rel err vs dense float ref = {rel:.4f} "
+          f"(backends: {', '.join(codr.available_backends())})")
+    server = compiled.serve(max_batch=4)
     outs = server.serve([x[i] for i in range(6)])
     print(f"  batch server: {len(outs)} requests in {server.batches_run} "
           f"batches ✓")
-    for name, acc in model.sram_report((16, 16)):
+    for name, acc in compiled.sram_report((16, 16)):
         print(f"    {name}: est. SRAM accesses/sample={acc.total_sram:,.0f}")
 
 

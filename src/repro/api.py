@@ -1,0 +1,22 @@
+"""Public CoDR engine API — spec → compile → serve.
+
+    import repro.api as codr
+
+    spec = codr.ModelSpec.from_params(params)      # any conv/dense pytree
+    compiled = codr.compile(spec, codr.EncodeConfig(n_unique=16))
+    y = compiled.run(x)                            # from the RLE bitstreams
+    server = compiled.serve(max_batch=8)
+
+Everything here re-exports from :mod:`repro.core.api` (the pipeline) and
+:mod:`repro.core.backends` (the pluggable execution backends).
+"""
+from repro.core.api import (CompiledModel, EncodeConfig,  # noqa: F401
+                            LayerSpec, ModelSpec, compile)
+from repro.core.backends import (Backend, BackendCaps,  # noqa: F401
+                                 available_backends, get_backend, register)
+
+__all__ = [
+    "LayerSpec", "ModelSpec", "EncodeConfig", "CompiledModel", "compile",
+    "Backend", "BackendCaps", "available_backends", "get_backend",
+    "register",
+]

@@ -1,8 +1,10 @@
 """CoDR core: Universal Computation Reuse, customized RLE, the
-scalar-matrix-multiplication dataflow, access/energy cost models, and the
-SCNN/UCNN baselines the paper compares against."""
+scalar-matrix-multiplication dataflow, access/energy cost models, the
+SCNN/UCNN baselines the paper compares against, the pluggable execution
+backends, and the spec → compile → serve API (``repro.api``)."""
 from repro.core import rle, ucr, smm, dataflow, cost_model  # noqa: F401
 from repro.core.codr_linear import (PackedWeight, pack_unique,  # noqa: F401
                                     unpack_unique, codr_matmul_ref)
 from repro.core.ucr import (LayerCode, encode_conv_layer,  # noqa: F401
                             encode_linear_layer, quantize_int8, ucr_transform)
+from repro.core import backends, api  # noqa: F401  (after the codec deps)

@@ -1,0 +1,418 @@
+"""Spec → compile → serve: the unified CoDR engine API.
+
+The paper's contract is *encode once offline, execute from bitstreams
+forever* (§II-D).  This module exposes that contract as a three-stage
+pipeline — the same compiler-like shape SCNN and UCNN frame their
+accelerators with (compressed format → dataflow plan → PE execution):
+
+1. :class:`ModelSpec` — a declarative layer graph.  Constructible from
+   raw arrays (:meth:`LayerSpec.conv` / :meth:`LayerSpec.dense`), from
+   ``configs.paper_cnns`` geometry (:meth:`ModelSpec.from_shapes`,
+   :meth:`ModelSpec.from_paper_cnn`), or from **any conv/dense params
+   pytree** (:meth:`ModelSpec.from_params` — the checkpoint-ingestion
+   path).  No encoding happens here; a spec is cheap and inspectable.
+2. :class:`EncodeConfig` — every offline-encoder knob in one place:
+   the paper's U budget (``n_unique``), the tile geometry (``t_m`` /
+   ``t_n`` / ``t_m_linear``), fixed-vs-searched RLE bit-lengths
+   (``rle_params``), and the decode source.
+3. :func:`compile` — runs the offline pipeline exactly once and returns
+   a :class:`CompiledModel`: an executable with ``.run`` (from the
+   bitstreams), ``.reference`` / ``.quantized_reference`` (oracles),
+   ``.stats`` / ``.sram_report`` (accounting), and ``.serve`` (the
+   batched request path).  The execution backend is a first-class,
+   registry-resolved object (:mod:`repro.core.backends`); capability
+   mismatches (stride limits, linear-only kernels) fail at compile time
+   with the reason.
+
+Import as ``repro.api``::
+
+    import repro.api as codr
+
+    spec = codr.ModelSpec.from_params(params)       # any conv/dense pytree
+    compiled = codr.compile(spec, codr.EncodeConfig(n_unique=16))
+    y = compiled.run(x)                             # from RLE bitstreams
+    server = compiled.serve(max_batch=8)            # batched requests
+"""
+from __future__ import annotations
+
+import dataclasses
+import re as _re
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core import backends as _backends
+from repro.core import engine as _engine
+
+__all__ = [
+    "LayerSpec", "ModelSpec", "EncodeConfig", "CompiledModel", "compile",
+]
+
+
+# ---------------------------------------------------------------------------
+# stage 1: the declarative spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LayerSpec:
+    """One declarative layer: float weights + geometry, nothing encoded.
+
+    ``kind="conv"``   → ``weight`` is OIHW ``(M, N, RK, CK)``.
+    ``kind="linear"`` → ``weight`` is ``(M, N)`` = (out, in features).
+    """
+
+    kind: str
+    weight: np.ndarray
+    bias: np.ndarray | None = None
+    stride: int = 1
+    activation: str | None = None
+    name: str = ""
+
+    def __post_init__(self):
+        w = np.asarray(self.weight, dtype=np.float32)
+        object.__setattr__(self, "weight", w)
+        if self.kind not in ("conv", "linear"):
+            raise ValueError(f"kind must be 'conv' or 'linear', "
+                             f"got {self.kind!r}")
+        want_ndim = 4 if self.kind == "conv" else 2
+        if w.ndim != want_ndim:
+            raise ValueError(f"{self.kind} weight must be {want_ndim}-D, "
+                             f"got shape {w.shape} for layer "
+                             f"{self.name or '?'}")
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1, got {self.stride}")
+        if self.bias is not None:
+            b = np.asarray(self.bias, dtype=np.float32)
+            if b.shape != (w.shape[0],):
+                raise ValueError(f"bias shape {b.shape} != ({w.shape[0]},) "
+                                 f"for layer {self.name or '?'}")
+            object.__setattr__(self, "bias", b)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def conv(cls, weight, bias=None, *, stride: int = 1,
+             activation: str | None = None, name: str = "conv"):
+        return cls("conv", weight, bias, stride=stride,
+                   activation=activation, name=name)
+
+    @classmethod
+    def dense(cls, weight, bias=None, *, activation: str | None = None,
+              name: str = "dense"):
+        return cls("linear", weight, bias, activation=activation, name=name)
+
+    @property
+    def out_features(self) -> int:
+        return int(self.weight.shape[0])
+
+    @property
+    def in_features(self) -> int:
+        return int(self.weight.shape[1])
+
+
+class ModelSpec:
+    """A declarative stack of :class:`LayerSpec` — conv layers first,
+    then linear (the engine auto-flattens at the boundary)."""
+
+    def __init__(self, layers: Sequence[LayerSpec]):
+        self.layers = list(layers)
+        if not self.layers:
+            raise ValueError("ModelSpec needs at least one layer")
+        seen_linear = False
+        prev = None
+        for ls in self.layers:
+            if ls.kind == "conv":
+                if seen_linear:
+                    raise ValueError(f"conv layer {ls.name!r} after a "
+                                     f"linear layer — conv layers must "
+                                     f"precede the linear head")
+                if prev is not None and ls.in_features != prev.out_features:
+                    raise ValueError(
+                        f"layer {ls.name!r} expects {ls.in_features} input "
+                        f"channels, previous layer {prev.name!r} produces "
+                        f"{prev.out_features}")
+                prev = ls
+            else:
+                seen_linear = True
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def __iter__(self):
+        return iter(self.layers)
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{ls.name or ls.kind}:{ls.kind}"
+                          f"{tuple(ls.weight.shape)}" for ls in self.layers)
+        return f"ModelSpec([{inner}])"
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_shapes(cls, shapes, n_out: int, *, density: float = 0.4,
+                    rng=None, activation: str | None = "relu",
+                    scale: float = 0.5) -> "ModelSpec":
+        """Paper-style sparse Gaussian weights over ``ConvShape``
+        geometry (``configs.paper_cnns``) + a linear head sized from the
+        spatial chain; consecutive shapes must be channel-consistent."""
+        rng = np.random.default_rng(0) if rng is None else rng
+        layers: list[LayerSpec] = []
+        ri, ci = shapes[0].ri, shapes[0].ci
+        for i, s in enumerate(shapes):
+            w = rng.normal(size=(s.m, s.n, s.rk, s.ck)
+                           ).astype(np.float32) * scale
+            w[rng.random(w.shape) > density] = 0
+            layers.append(LayerSpec.conv(w, stride=s.stride,
+                                         activation=activation,
+                                         name=f"conv{i}"))
+            ri = (ri - s.rk) // s.stride + 1
+            ci = (ci - s.ck) // s.stride + 1
+            if ri < 1 or ci < 1:
+                raise ValueError(f"input {shapes[0].ri}x{shapes[0].ci} too "
+                                 f"small: feature map vanishes at layer {i}")
+        feat = ri * ci * shapes[-1].m
+        wl = rng.normal(size=(n_out, feat)).astype(np.float32) * 0.1
+        wl[rng.random(wl.shape) > density] = 0
+        layers.append(LayerSpec.dense(wl, name="fc"))
+        return cls(layers)
+
+    @classmethod
+    def from_paper_cnn(cls, net: str, *, n_conv: int = 2, n_out: int = 10,
+                       ri: int | None = None, ci: int | None = None,
+                       density: float = 0.4, rng=None,
+                       activation: str | None = "relu") -> "ModelSpec":
+        """Random weights on the published layer geometry of a paper CNN
+        (``configs.paper_cnns``: alexnet / vgg16 / googlenet)."""
+        shapes = _engine.paper_model_shapes(net, n_conv=n_conv, ri=ri, ci=ci)
+        return cls.from_shapes(shapes, n_out, density=density, rng=rng,
+                               activation=activation)
+
+    @classmethod
+    def from_params(cls, params, *, stride=1, activation=None,
+                    linear_layout: str = "out_in",
+                    min_size: int = 0) -> "ModelSpec":
+        """Ingest **any conv/dense params pytree** (the checkpoint path).
+
+        Walks the pytree in flatten order; every 4-D leaf becomes a conv
+        layer (OIHW) and every 2-D leaf a linear layer.  A 1-D leaf in
+        the same subtree whose length matches a weight's output features
+        becomes that layer's bias.  This subsumes the ingestion half of
+        ``serving.codr_compress_params`` — compression accounting for the
+        resulting spec comes from ``compile(spec, cfg).stats()``.
+
+        ``stride``        int for all conv layers, or ``{name: int}``.
+        ``activation``    ``None``/str for all layers, or ``{name: str}``
+                          (names are '/'-joined pytree paths to the
+                          weight's subtree, e.g. ``"conv0"``).
+        ``linear_layout`` ``"out_in"`` (M, N) — the engine convention —
+                          or ``"in_out"`` for ``repro.models``-style
+                          ``(d_in, d_out)`` matrices (transposed here).
+        ``min_size``      skip weight leaves smaller than this (parallel
+                          to ``codr_compress_params``' tiny-leaf filter).
+        """
+        if linear_layout not in ("out_in", "in_out"):
+            raise ValueError(f"linear_layout must be 'out_in' or 'in_out', "
+                             f"got {linear_layout!r}")
+
+        def natural_key(name: str):
+            # JAX flattens dicts in sorted-key order, which puts
+            # "conv10" before "conv2"; compare digit runs numerically so
+            # numbered layers keep their intended sequence
+            return tuple(tuple((0, int(p)) if p.isdigit() else (1, p)
+                               for p in _re.split(r"(\d+)", comp) if p)
+                         for comp in name.split("/"))
+
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        groups: dict[str, dict] = {}
+        for path, leaf in flat:
+            arr = np.asarray(leaf)
+            keys = [str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path]
+            gname = "/".join(keys[:-1]) if len(keys) > 1 else "/".join(keys)
+            g = groups.setdefault(gname, {"weights": [], "biases": []})
+            if arr.ndim in (2, 4) and arr.size >= min_size:
+                g["weights"].append((keys[-1] if len(keys) > 1 else gname,
+                                     arr))
+            elif arr.ndim == 1:
+                g["biases"].append(arr)
+
+        def opt(option, name, default):
+            if isinstance(option, dict):
+                return option.get(name, default)
+            return option
+
+        layers: list[LayerSpec] = []
+        for gname in sorted(groups, key=natural_key):
+            g = groups[gname]
+            for wname, w in g["weights"]:
+                name = gname if len(g["weights"]) == 1 else \
+                    f"{gname}/{wname}"
+                if w.ndim == 2 and linear_layout == "in_out":
+                    w = np.ascontiguousarray(w.T)
+                # pair by matching length, CONSUMING the bias so two
+                # same-shaped weights in one subtree never share one
+                bi = next((i for i, b in enumerate(g["biases"])
+                           if b.shape == (w.shape[0],)), None)
+                bias = None if bi is None else g["biases"].pop(bi)
+                if w.ndim == 4:
+                    layers.append(LayerSpec.conv(
+                        w, bias, stride=opt(stride, name, 1),
+                        activation=opt(activation, name, None), name=name))
+                else:
+                    layers.append(LayerSpec.dense(
+                        w, bias, activation=opt(activation, name, None),
+                        name=name))
+        if not layers:
+            raise ValueError("from_params found no 2-D/4-D weight leaves "
+                             "in the pytree")
+        return cls(layers)
+
+
+# ---------------------------------------------------------------------------
+# stage 2: the encoder configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EncodeConfig:
+    """Every offline-encoder knob, in one declarative place.
+
+    ``n_unique``    the paper's U budget (Fig. 6): total quantization
+                    levels including zero; 256 = plain int8.
+    ``t_m, t_n``    conv output/input-channel tile sizes (§II-D step i).
+    ``t_m_linear``  output-feature tile for linear layers (clamped to M).
+    ``rle_params``  fixed (delta, rep, index) RLE bit-lengths; ``None``
+                    runs the per-layer, per-structure search of §III-C.
+    ``decode_source``  ``"bitstream"`` decodes the real RLE streams
+                    (default, proves the stored code executes);
+                    ``"ucr"`` rebuilds from retained UCR vectors.
+    """
+
+    n_unique: int = 256
+    t_m: int = 4
+    t_n: int = 4
+    t_m_linear: int = 256
+    rle_params: tuple[int, int, int] | None = None
+    decode_source: str = "bitstream"
+
+    def __post_init__(self):
+        # n_unique=2 would leave only the zero level (restrict_unique
+        # collapses every int8 level to 0 at that setting) — a silently
+        # dead model; 3 = zero plus one level per sign is the real floor
+        if not 3 <= self.n_unique <= 256:
+            raise ValueError(f"n_unique must be in [3, 256], "
+                             f"got {self.n_unique}")
+        if min(self.t_m, self.t_n, self.t_m_linear) < 1:
+            raise ValueError("tile sizes must be >= 1")
+        if self.decode_source not in ("bitstream", "ucr"):
+            raise ValueError(f"unknown decode_source "
+                             f"{self.decode_source!r}")
+
+    def metadata(self) -> dict:
+        """JSON-friendly dict — stamped into ``BENCH_*.json`` so perf
+        points stay comparable across encode configurations."""
+        d = dataclasses.asdict(self)
+        d["rle_params"] = (list(self.rle_params)
+                          if self.rle_params is not None else None)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# stage 3: compile → executable
+# ---------------------------------------------------------------------------
+
+class CompiledModel:
+    """The executable a :func:`compile` call returns: encode happened
+    exactly once, every ``run`` executes from the stored bitstreams via
+    the backend bound at compile time (overridable per call)."""
+
+    def __init__(self, model: "_engine.CodrModel", spec: ModelSpec,
+                 config: EncodeConfig, backend: _backends.Backend):
+        self.model = model
+        self.spec = spec
+        self.config = config
+        self.backend = backend
+
+    # -- execution ----------------------------------------------------------
+    def run(self, batch, *, backend=None) -> jax.Array:
+        """Forward a batch from the RLE bitstreams.  ``backend`` (name or
+        instance) overrides the compile-time choice for this call."""
+        be = self.backend if backend is None else _backends.resolve(backend)
+        if be is not self.backend:
+            ok, reason = be.supports_model(self.model.layers)
+            if not ok:
+                raise ValueError(reason)
+        return be.run_model(self.model, batch)
+
+    __call__ = run
+
+    def reference(self, batch) -> jax.Array:
+        """Dense float oracle (original uncompressed weights)."""
+        return self.model.reference(batch)
+
+    def quantized_reference(self, batch) -> jax.Array:
+        """Dense oracle on the dequantized decoded weights — ``run`` must
+        match this up to float summation order."""
+        return self.model.quantized_reference(batch)
+
+    def serve(self, *, max_batch: int = 8):
+        """Batched request path over this executable
+        (:class:`repro.core.serving.CodrBatchServer`)."""
+        from repro.core.serving import CodrBatchServer
+        return CodrBatchServer(self, max_batch=max_batch)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def trace_count(self) -> int:
+        return self.model.trace_count
+
+    def stats(self):
+        return self.model.stats()
+
+    def total_bits(self) -> int:
+        return self.model.total_bits()
+
+    def bits_per_weight(self) -> float:
+        return self.model.bits_per_weight()
+
+    def sram_report(self, input_hw, **kw):
+        return self.model.sram_report(input_hw, **kw)
+
+    def verify_roundtrip(self) -> None:
+        self.model.verify_roundtrip()
+
+    def __repr__(self) -> str:
+        return (f"CompiledModel({len(self.model.layers)} layers, "
+                f"{self.bits_per_weight():.2f} bits/weight, "
+                f"backend={self.backend.name!r})")
+
+
+def compile(spec: ModelSpec, config: EncodeConfig | None = None, *,
+            backend: str | _backends.Backend = "tiled") -> CompiledModel:
+    """Run the offline pipeline once over a spec; return the executable.
+
+    The backend is resolved through the registry and capability-checked
+    against the spec BEFORE any encoding work, so a stride the backend
+    cannot lower or a conv layer handed to a linear-only kernel fails
+    fast with the reason.
+    """
+    config = EncodeConfig() if config is None else config
+    be = _backends.resolve(backend)
+    ok, reason = be.supports_model(spec.layers)
+    if not ok:
+        raise ValueError(f"cannot compile: {reason}")
+
+    layers: list = []
+    for i, ls in enumerate(spec.layers):
+        name = ls.name or f"layer{i}"
+        if ls.kind == "conv":
+            layers.append(_engine.CodrConv2D(
+                ls.weight, ls.bias, stride=ls.stride, t_m=config.t_m,
+                t_n=config.t_n, activation=ls.activation, name=name,
+                decode_source=config.decode_source,
+                n_unique=config.n_unique, rle_params=config.rle_params))
+        else:
+            layers.append(_engine.CodrLinear(
+                ls.weight, ls.bias, t_m=config.t_m_linear,
+                activation=ls.activation, name=name,
+                decode_source=config.decode_source,
+                n_unique=config.n_unique, rle_params=config.rle_params))
+    return CompiledModel(_engine.CodrModel(layers), spec, config, be)

@@ -1,0 +1,323 @@
+"""Pluggable execution backends for the CoDR engine.
+
+The paper's accelerator is one fixed datapath; a software reproduction
+grows several — the fused XLA tile dispatch, the faithful NumPy MPE/APE
+execution model, the Pallas SMM kernel, the fused-decode matmul kernel.
+Previously each was reachable through a different stringly-typed knob
+(``CodrModel.run(backend=...)`` if/else chains, ``smm_forward(kernel=...)``).
+This module makes backends first class:
+
+* :class:`BackendCaps` — declarative capability flags (stride support,
+  integer-activation requirement, which layer kinds execute natively).
+  Kernel-adjacent facts live next to the kernels themselves
+  (``repro.kernels.*.ops.KERNEL_CAPS``) and are consumed here.
+* :class:`Backend` — the protocol: ``conv(layer, x)`` / ``linear(layer,
+  x)`` steps plus ``run_model(model, x)`` chaining, with ``supports``
+  answering *can this backend execute that layer, and if not, why not*.
+* a **registry** — :func:`register` / :func:`get_backend` /
+  :func:`available_backends` / :func:`resolve`.  ``repro.core.engine``
+  and ``repro.core.api`` dispatch exclusively through it; the ROADMAP's
+  multi-device sharding and async-serving work plug in here as new
+  registered backends.
+
+Built-ins registered at import:
+
+``tiled``        fused ``lax.conv`` tile dispatch (any stride, float path)
+``smm``          NumPy faithful MPE/APE execution (integer activations)
+``smm_kernel``   Pallas MPE/APE kernel, batch in the grid (integer acts)
+``codr_matmul``  Pallas fused decode+matmul (linear-only models)
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import smm, ucr
+
+__all__ = [
+    "Backend", "BackendCaps", "available_backends", "get_backend",
+    "register", "resolve", "TiledBackend", "SmmBackend",
+    "SmmKernelBackend", "CodrMatmulBackend",
+]
+
+
+# ---------------------------------------------------------------------------
+# capabilities
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendCaps:
+    """What a backend can execute, declaratively.
+
+    ``max_stride``           ``None`` = any stride.
+    ``integer_activations``  the backend runs the 8-bit feature datapath:
+                             integer-valued inputs execute exactly,
+                             anything else is int8-quantized first.
+    ``native_kinds``         layer kinds the backend executes itself;
+                             other kinds fall back per ``fallback_kinds``.
+    ``fallback_kinds``       kinds delegated to the layer's own tiled
+                             forward (empty = unsupported kinds error).
+    """
+
+    max_stride: int | None = None
+    integer_activations: bool = False
+    native_kinds: frozenset = frozenset({"conv", "linear"})
+    fallback_kinds: frozenset = frozenset()
+    description: str = ""
+
+    def supports_stride(self, stride: int) -> bool:
+        return self.max_stride is None or stride <= self.max_stride
+
+    def supports_kind(self, kind: str) -> bool:
+        return kind in self.native_kinds or kind in self.fallback_kinds
+
+
+# ---------------------------------------------------------------------------
+# backend protocol
+# ---------------------------------------------------------------------------
+
+def _finish(layer, y: jax.Array) -> jax.Array:
+    """Shared epilogue: bias + activation (what every datapath appends
+    after its accumulators drain)."""
+    if layer.bias is not None:
+        y = y + jnp.asarray(layer.bias)
+    return jax.nn.relu(y) if layer.activation == "relu" else y
+
+
+def _int_activations(x) -> tuple[np.ndarray, float]:
+    """The accelerator's 8-bit feature path: integer-valued inputs within
+    int8 range pass through exactly; anything else is symmetric
+    int8-quantized (its scale folds into the output)."""
+    xf = np.asarray(x, dtype=np.float32)
+    if np.array_equal(xf, np.rint(xf)) and np.abs(xf).max() <= 127:
+        return xf.astype(np.int32), 1.0
+    q8, s = ucr.quantize_int8(xf)
+    return q8.astype(np.int32), float(np.asarray(s))
+
+
+class Backend(abc.ABC):
+    """One way to execute CoDR layers.  Layers are duck-typed
+    (:class:`repro.core.engine.CodrConv2D` / ``CodrLinear`` or anything
+    exposing the same ``code`` / ``kind`` / ``stride`` surface)."""
+
+    name: str = ""
+    caps: BackendCaps = BackendCaps()
+
+    # -- capability queries -------------------------------------------------
+    def supports(self, layer) -> tuple[bool, str]:
+        """``(ok, reason)`` — can this backend execute ``layer``?"""
+        if not self.caps.supports_kind(layer.kind):
+            return False, (f"backend {self.name!r} has no {layer.kind!r} "
+                           f"path (native: {sorted(self.caps.native_kinds)})")
+        stride = getattr(layer, "stride", 1)
+        if layer.kind == "conv" and not self.caps.supports_stride(stride):
+            return False, (f"backend {self.name!r} supports stride <= "
+                           f"{self.caps.max_stride}, layer {layer.name!r} "
+                           f"has stride {stride}")
+        return True, ""
+
+    def supports_model(self, layers) -> tuple[bool, str]:
+        for layer in layers:
+            ok, reason = self.supports(layer)
+            if not ok:
+                return False, reason
+        return True, ""
+
+    # -- execution ----------------------------------------------------------
+    @abc.abstractmethod
+    def conv(self, layer, x: jax.Array) -> jax.Array:
+        """Forward one conv layer: NHWC ``(B, RI, CI, N)`` → NHWC out."""
+
+    def linear(self, layer, x: jax.Array) -> jax.Array:
+        """Forward one linear layer ``(B, N)`` → ``(B, M)``.  Default:
+        the layer's own fused tiled matmul."""
+        return layer(x)
+
+    def step(self, layer, x: jax.Array) -> jax.Array:
+        if layer.kind == "conv":
+            return self.conv(layer, x)
+        if layer.kind == "linear":
+            return self.linear(layer, x)
+        raise ValueError(f"unknown layer kind {layer.kind!r}")
+
+    def run_model(self, model, batch: jax.Array) -> jax.Array:
+        """Forward a batch through a :class:`~repro.core.engine.CodrModel`
+        (or any object exposing ``_chain``)."""
+        return model._chain(jnp.asarray(batch, jnp.float32), self.step)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register(backend: Backend, *, overwrite: bool = False) -> Backend:
+    """Add a backend instance to the registry (name taken from the
+    instance).  Future executors — sharded, async, TPU-tuned — register
+    here and become selectable everywhere a backend name is accepted."""
+    if not backend.name:
+        raise ValueError("backend must set a non-empty .name")
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> tuple[str, ...]:
+    """Registered backend names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{', '.join(_REGISTRY) or '(none)'}") from None
+
+
+def resolve(backend: str | Backend) -> Backend:
+    """Accept a registered name or a Backend instance."""
+    if isinstance(backend, Backend):
+        return backend
+    return get_backend(backend)
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+class TiledBackend(Backend):
+    """Fused XLA tile dispatch (default): each layer's decoded tile stack
+    collapses into ONE ``lax.conv`` / matmul per layer, the whole model
+    chain jitted once per input shape (compile-once contract)."""
+
+    name = "tiled"
+    caps = BackendCaps(description="fused lax.conv/matmul tile dispatch, "
+                                   "any stride, float datapath")
+
+    def conv(self, layer, x):
+        return layer(x)
+
+    def run_model(self, model, batch):
+        # whole-model jitted chain, cached on the model — XLA fuses across
+        # layer boundaries; repeat same-shape requests re-trace nothing
+        if model._run_tiled is None:
+            model._run_tiled = jax.jit(
+                lambda x: model._chain(x, lambda l, xx: l(xx)))
+        return model._run_tiled(jnp.asarray(batch, jnp.float32))
+
+
+class SmmBackend(Backend):
+    """Faithful MPE/APE execution model in NumPy
+    (:func:`repro.core.smm.conv2d_smm_batched`): differential
+    scalar–matrix multiplies + crossbar routing, bit-exact in int32,
+    broadcasting every routed window over the batch axis."""
+
+    name = "smm"
+    caps = BackendCaps(integer_activations=True,
+                       native_kinds=frozenset({"conv"}),
+                       fallback_kinds=frozenset({"linear"}),
+                       description="NumPy faithful MPE/APE execution "
+                                   "(8-bit feature path)")
+
+    def conv(self, layer, x):
+        xi, x_scale = _int_activations(x)
+        scale = float(np.asarray(layer.code.scale)) * x_scale
+        outs = smm.conv2d_smm_batched(np.moveaxis(xi, 3, 1), layer.code,
+                                      layer.stride)
+        return _finish(layer, jnp.asarray(np.moveaxis(outs, 1, 3),
+                                          jnp.float32) * scale)
+
+
+class SmmKernelBackend(Backend):
+    """Pallas MPE/APE kernel (:mod:`repro.kernels.smm_conv`): the whole
+    batch in one dispatch via a batch grid dimension, operands packed
+    once per layer and cached on it."""
+
+    name = "smm_kernel"
+    _caps: BackendCaps | None = None
+
+    @property
+    def caps(self) -> BackendCaps:
+        # resolved lazily from the kernel's own KERNEL_CAPS so merely
+        # importing repro.core never pulls in jax.experimental.pallas
+        if self._caps is None:
+            from repro.kernels.smm_conv import ops as smm_ops
+            kc = smm_ops.KERNEL_CAPS
+            self._caps = BackendCaps(
+                integer_activations=kc["integer_activations"],
+                max_stride=kc["max_stride"],
+                native_kinds=frozenset(kc["kinds"]),
+                # linear layers fall back to the fused tiled matmul — a
+                # backend policy, not a kernel fact
+                fallback_kinds=frozenset({"linear"}),
+                description=kc["description"])
+        return self._caps
+
+    def conv(self, layer, x):
+        from repro.kernels.smm_conv import smm_conv_batched
+        xi, x_scale = _int_activations(x)
+        scale = float(np.asarray(layer.code.scale)) * x_scale
+        y = smm_conv_batched(jnp.asarray(np.moveaxis(xi, 3, 1), jnp.float32),
+                             layer.code, stride=layer.stride,
+                             operands=layer.smm_operands())
+        return _finish(layer, jnp.moveaxis(y, 1, 3) * scale)
+
+
+class CodrMatmulBackend(Backend):
+    """Pallas fused decode+matmul (:mod:`repro.kernels.codr_matmul`):
+    linear layers execute from the fixed-width unique-index pack, the
+    table gather fused into the MXU tiles.  Linear-only — a model with
+    conv layers is rejected at compile time via :meth:`supports`."""
+
+    name = "codr_matmul"
+    _caps: BackendCaps | None = None
+
+    @property
+    def caps(self) -> BackendCaps:
+        if self._caps is None:
+            from repro.kernels.codr_matmul import ops as mm_ops
+            kc = mm_ops.KERNEL_CAPS
+            self._caps = BackendCaps(
+                native_kinds=frozenset(kc["kinds"]),
+                integer_activations=kc["integer_activations"],
+                description=kc["description"])
+        return self._caps
+
+    def conv(self, layer, x):                      # pragma: no cover
+        raise NotImplementedError("codr_matmul is linear-only")
+
+    def linear(self, layer, x):
+        from repro.core.codr_linear import pack_unique
+        from repro.kernels.codr_matmul import codr_matmul
+        packed = getattr(layer, "_mm_packed", None)
+        if packed is None:
+            # decoded (M, N) int8 → (K=N_in, N=M_out) pack; pad M_out to
+            # a multiple of 32 — every per-word width pack_unique may
+            # choose divides 32, so the pack always lines up whatever
+            # bit-length the (possibly pad-grown) unique table needs —
+            # and crop the extra columns after the matmul
+            q = layer.decoded_weights().T            # (N_in, M_out) int8
+            pad = (-q.shape[1]) % 32
+            if pad:
+                q = np.pad(q, ((0, 0), (0, pad)))
+            packed = pack_unique(q, float(np.asarray(layer.code.scale)),
+                                 dtype=jnp.float32)
+            layer._mm_packed = packed
+        m = layer.code.shape[0]
+        y = codr_matmul(jnp.asarray(x, jnp.float32), packed)[:, :m]
+        return _finish(layer, y)
+
+
+register(TiledBackend())
+register(SmmBackend())
+register(SmmKernelBackend())
+register(CodrMatmulBackend())

@@ -27,27 +27,32 @@ SRAM accounting (:mod:`repro.core.dataflow`) — into an executable model:
   ``jax.lax.conv`` reference oracle for every layer and per-layer SRAM
   access estimates from :func:`repro.core.dataflow.codr_accesses`.
 
-Backends:
+Backends are first class (:mod:`repro.core.backends`): ``run`` resolves
+its ``backend`` argument — a registered name or a ``Backend`` instance —
+through the registry; there is no string dispatch here.  Built-ins:
+``tiled`` (fused lax.conv, default), ``smm`` (NumPy faithful MPE/APE),
+``smm_kernel`` (Pallas MPE/APE), ``codr_matmul`` (fused decode+matmul,
+linear-only).  The ``smm*`` backends run the differential
+scalar–matrix-multiply mechanism itself on the 8-bit feature datapath.
 
-``tiled``       batched vmap-over-tiles lax.conv path (default; any stride)
-``smm``         NumPy faithful MPE/APE execution (:func:`repro.core.smm.conv2d_smm`)
-``smm_kernel``  Pallas MPE/APE kernel per sample (stride 1; interpret on CPU)
-
-The ``smm*`` backends run the differential scalar–matrix-multiply
-mechanism itself and require integer-valued activations (they compute in
-exact integer arithmetic; the layer scale is applied afterwards).
+.. deprecated::
+    Constructing ``CodrConv2D`` / ``CodrLinear`` / ``CodrModel`` directly
+    is the legacy path.  New code should go through the spec → compile →
+    serve API (:mod:`repro.core.api`, exported as ``repro.api``):
+    ``codr.compile(ModelSpec(...), EncodeConfig(...))``.  These classes
+    remain as thin shims over the same internals.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dataflow, rle, smm, ucr
+from repro.core import backends as _backends
+from repro.core import dataflow, rle, ucr
 from repro.core.dataflow import CODR_TILING, ConvShape
 
 __all__ = [
@@ -87,14 +92,40 @@ def _layer_stats(name: str, kind: str, code: ucr.LayerCode) -> LayerStats:
 # bitstream → dense tiles (decode-on-dispatch)
 # ---------------------------------------------------------------------------
 
+def decode_all_tiles(code: ucr.LayerCode, *,
+                     source: str = "bitstream") -> np.ndarray:
+    """All tiles, stacked: int8 ``(n_tiles, t_m, N, RK, CK)``.
+
+    ``source="bitstream"`` decodes the real RLE bitstreams — the whole
+    layer in one vectorized pass (:func:`repro.core.rle.decode_layer`, no
+    per-vector Python loop; the scalar ``rle.decode_vector`` survives
+    only as the parity oracle in the tests); ``source="ucr"`` rebuilds
+    from the retained UCR vectors (bit-identical — benchmark shortcut).
+    """
+    n_tiles = -(-code.shape[0] // code.t_m)
+    n = code.shape[1]
+    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
+    pad_to = code.t_m * rk * ck
+    if source == "bitstream":
+        flat = rle.decode_layer(code, pad_to=pad_to)
+    elif source == "ucr":
+        flat = np.zeros((len(code.ucr), pad_to), dtype=np.int8)
+        for i, u in enumerate(code.ucr):
+            flat[i, : u.vector_len] = ucr.ucr_reconstruct(u)
+    else:
+        raise ValueError(f"unknown decode source {source!r} "
+                         f"(expected 'bitstream' or 'ucr')")
+    return np.ascontiguousarray(
+        flat.reshape(n_tiles, n, code.t_m, rk, ck).transpose(0, 2, 1, 3, 4))
+
+
 def decode_tile(code: ucr.LayerCode, mt: int, *,
                 source: str = "bitstream") -> np.ndarray:
-    """Decode output-channel tile ``mt`` of a layer's code.
-
-    ``source="bitstream"`` decodes the real RLE bitstreams
-    (:func:`repro.core.rle.decode_vector` — proves the stored code is
-    executable); ``source="ucr"`` rebuilds from the retained UCR vectors
-    (bit-identical, much faster — benchmark path).
+    """Decode output-channel tile ``mt`` of a layer's code through the
+    vectorized bulk decoder (:func:`repro.core.rle.decode_layer`), fed
+    only that tile's vectors — O(tile), not O(layer).  The old
+    per-vector scalar bit-loop lives on only as the parity oracle in
+    ``tests/test_engine.py``.
 
     Returns int8 ``(t_m, N, RK, CK)``; rows past the true output-channel
     count (ragged last tile) are zero.  Vector order inside a tile is
@@ -102,36 +133,19 @@ def decode_tile(code: ucr.LayerCode, mt: int, *,
     """
     n = code.shape[1]
     rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
-    tm_eff = min(code.t_m, code.shape[0] - mt * code.t_m)
-    w = np.zeros((code.t_m, n, rk, ck), dtype=np.int8)
-    for nn in range(n):
-        if source == "bitstream":
-            vec = rle.decode_vector(code.vectors[mt * n + nn])
-        else:
-            vec = ucr.ucr_reconstruct(code.ucr[mt * n + nn])
-        w[:tm_eff, nn] = vec.reshape(tm_eff, rk, ck)
-    return w
-
-
-def decode_all_tiles(code: ucr.LayerCode, *,
-                     source: str = "bitstream") -> np.ndarray:
-    """All tiles, stacked: int8 ``(n_tiles, t_m, N, RK, CK)``.
-
-    The bitstream path decodes the whole layer in one vectorized pass
-    (:func:`repro.core.rle.decode_layer` — no per-vector Python loop);
-    :func:`decode_tile` stays as the per-tile scalar parity oracle.
-    """
-    n_tiles = -(-code.shape[0] // code.t_m)
+    pad_to = code.t_m * rk * ck
     if source == "bitstream":
-        n = code.shape[1]
-        rk, ck = (code.shape[2], code.shape[3]) \
-            if len(code.shape) == 4 else (1, 1)
-        flat = rle.decode_layer(code, pad_to=code.t_m * rk * ck)
-        return np.ascontiguousarray(
-            flat.reshape(n_tiles, n, code.t_m, rk, ck)
-                .transpose(0, 2, 1, 3, 4))
-    return np.stack([decode_tile(code, mt, source=source)
-                     for mt in range(n_tiles)])
+        flat = rle.decode_layer(code.vectors[mt * n:(mt + 1) * n],
+                                pad_to=pad_to)
+    elif source == "ucr":
+        flat = np.zeros((n, pad_to), dtype=np.int8)
+        for i, u in enumerate(code.ucr[mt * n:(mt + 1) * n]):
+            flat[i, : u.vector_len] = ucr.ucr_reconstruct(u)
+    else:
+        raise ValueError(f"unknown decode source {source!r} "
+                         f"(expected 'bitstream' or 'ucr')")
+    return np.ascontiguousarray(
+        flat.reshape(n, code.t_m, rk, ck).transpose(1, 0, 2, 3))
 
 
 # ---------------------------------------------------------------------------
@@ -149,14 +163,18 @@ class CodrConv2D:
     def __init__(self, w: np.ndarray, bias: np.ndarray | None = None, *,
                  stride: int = 1, t_m: int = 4, t_n: int = 4,
                  activation: str | None = None, name: str = "conv",
-                 decode_source: str = "bitstream"):
+                 decode_source: str = "bitstream", n_unique: int = 256,
+                 rle_params: tuple[int, int, int] | None = None):
         w = np.asarray(w, dtype=np.float32)
         assert w.ndim == 4, "conv weights must be (M, N, RK, CK)"
         self.name = name
         self.stride = int(stride)
         self.activation = activation
         self.decode_source = decode_source
-        self.code = ucr.encode_conv_layer(w, t_m=t_m, t_n=t_n)
+        self.n_unique = int(n_unique)
+        self.code = ucr.encode_conv_layer(w, t_m=t_m, t_n=t_n,
+                                          n_unique=n_unique,
+                                          params=rle_params)
         self.bias = None if bias is None else np.asarray(bias, np.float32)
         self._w_ref = w                      # oracle only — never executed
         self._tiles: np.ndarray | None = None  # decoded int8 tile cache
@@ -189,8 +207,10 @@ class CodrConv2D:
         return t.reshape(-1, *t.shape[2:])[:m]
 
     def verify_roundtrip(self) -> None:
-        """Bitstream decode must equal direct quantization of the floats."""
+        """Bitstream decode must equal direct quantization (plus any
+        unique-level restriction) of the floats."""
         q, _ = ucr.quantize_int8(self._w_ref)
+        q = ucr.restrict_unique(q, self.n_unique)
         if not np.array_equal(self.decoded_weights(), q):
             raise AssertionError(f"{self.name}: UCR+RLE roundtrip mismatch")
 
@@ -218,7 +238,10 @@ class CodrConv2D:
         scale = float(np.asarray(self.code.scale))
         m = self.code.shape[0]
         stride = (self.stride, self.stride)
-        bias = None if self.bias is None else jnp.asarray(self.bias)
+        # concrete even when built lazily inside an outer (model-level)
+        # jit trace — a traced constant here would leak into later traces
+        with jax.ensure_compile_time_eval():
+            bias = None if self.bias is None else jnp.asarray(self.bias)
         act = self.activation
 
         def forward(x, tiles_f32):
@@ -273,37 +296,14 @@ class CodrConv2D:
             self._smm_ops = (jnp.asarray(deltas), jnp.asarray(entries), meta)
         return self._smm_ops
 
-    # faithful-mechanism execution (8-bit feature datapath) — batched
-    # scalar–matrix multiplies + routing, whole batch in one dispatch
     def smm_forward(self, x: jax.Array, *, kernel: bool = False) -> jax.Array:
-        """Run the differential SMM mechanism itself.  Activations go
-        through the accelerator's 8-bit feature path: integer-valued
-        inputs within int8 range run exactly; anything else is symmetric
-        int8-quantized first (its scale folds into the output).  Both
-        backends execute the whole batch at once — the Pallas kernel
-        batches via its grid, the NumPy path broadcasts the scalar–matrix
-        products over the batch axis."""
-        xf = np.asarray(x, dtype=np.float32)
-        if np.array_equal(xf, np.rint(xf)) and np.abs(xf).max() <= 127:
-            xi, x_scale = xf.astype(np.int32), 1.0
-        else:
-            q8, s = ucr.quantize_int8(xf)
-            xi, x_scale = q8.astype(np.int32), float(np.asarray(s))
-        scale = float(np.asarray(self.code.scale)) * x_scale
-        if kernel:
-            from repro.kernels.smm_conv import smm_conv_batched
-            y = smm_conv_batched(jnp.asarray(np.moveaxis(xi, 3, 1),
-                                             jnp.float32), self.code,
-                                 stride=self.stride,
-                                 operands=self.smm_operands())
-            y = jnp.moveaxis(y, 1, 3) * scale
-        else:
-            outs = smm.conv2d_smm_batched(np.moveaxis(xi, 3, 1), self.code,
-                                          self.stride)
-            y = jnp.asarray(np.moveaxis(outs, 1, 3), jnp.float32) * scale
-        if self.bias is not None:
-            y = y + jnp.asarray(self.bias)
-        return jax.nn.relu(y) if self.activation == "relu" else y
+        """Deprecated shim: run the differential SMM mechanism via the
+        backend registry — ``kernel=False`` → the ``smm`` backend (NumPy
+        faithful execution), ``kernel=True`` → ``smm_kernel`` (Pallas).
+        New code selects the backend by name at compile/run time instead
+        (:mod:`repro.core.backends`)."""
+        backend = _backends.get_backend("smm_kernel" if kernel else "smm")
+        return backend.conv(self, x)
 
 
 class CodrLinear:
@@ -317,13 +317,18 @@ class CodrLinear:
 
     def __init__(self, w: np.ndarray, bias: np.ndarray | None = None, *,
                  t_m: int = 256, activation: str | None = None,
-                 name: str = "linear", decode_source: str = "bitstream"):
+                 name: str = "linear", decode_source: str = "bitstream",
+                 n_unique: int = 256,
+                 rle_params: tuple[int, int, int] | None = None):
         w = np.asarray(w, dtype=np.float32)
         assert w.ndim == 2, "linear weights must be (M, N)"
         self.name = name
         self.activation = activation
         self.decode_source = decode_source
-        self.code = ucr.encode_linear_layer(w, t_m=min(t_m, w.shape[0]))
+        self.n_unique = int(n_unique)
+        self.code = ucr.encode_linear_layer(w, t_m=min(t_m, w.shape[0]),
+                                            n_unique=n_unique,
+                                            params=rle_params)
         self.bias = None if bias is None else np.asarray(bias, np.float32)
         self._w_ref = w
         self._tiles: np.ndarray | None = None
@@ -354,6 +359,7 @@ class CodrLinear:
 
     def verify_roundtrip(self) -> None:
         q, _ = ucr.quantize_int8(self._w_ref)
+        q = ucr.restrict_unique(q, self.n_unique)
         if not np.array_equal(self.decoded_weights(), q):
             raise AssertionError(f"{self.name}: UCR+RLE roundtrip mismatch")
 
@@ -367,7 +373,8 @@ class CodrLinear:
     def _build_forward(self):
         scale = float(np.asarray(self.code.scale))
         m = self.code.shape[0]
-        bias = None if self.bias is None else jnp.asarray(self.bias)
+        with jax.ensure_compile_time_eval():
+            bias = None if self.bias is None else jnp.asarray(self.bias)
         act = self.activation
 
         def forward(x, tiles_f32):
@@ -410,6 +417,10 @@ class CodrModel:
     ``reference`` runs the original float weights through dense
     ``jax.lax.conv`` / matmul — the golden parity target within int8
     quantization tolerance.
+
+    .. deprecated:: prefer ``repro.api.compile(spec, config)`` — it
+        builds this class internally and returns a
+        :class:`repro.core.api.CompiledModel` wrapper.
     """
 
     def __init__(self, layers: Sequence[CodrConv2D | CodrLinear]):
@@ -428,33 +439,23 @@ class CodrModel:
         """Total layer re-traces — flat across repeat same-shape calls."""
         return sum(l.trace_count for l in self.layers)
 
-    def __call__(self, batch: jax.Array, *, backend: str = "tiled") -> jax.Array:
+    def __call__(self, batch: jax.Array, *,
+                 backend: str | _backends.Backend = "tiled") -> jax.Array:
         return self.run(batch, backend=backend)
 
-    def run(self, batch: jax.Array, *, backend: str = "tiled") -> jax.Array:
+    def run(self, batch: jax.Array, *,
+            backend: str | _backends.Backend = "tiled") -> jax.Array:
         """Forward an NHWC batch through the compressed model.
 
-        The ``tiled`` backend is compiled ONCE for the whole model: the
-        per-layer forwards inline into a single jitted chain (XLA fuses
-        across layer boundaries — no per-layer dispatch or host hops),
-        cached per input shape.  Repeat same-shape requests re-trace
-        nothing — see :attr:`trace_count`.
+        ``backend`` is resolved through the registry
+        (:mod:`repro.core.backends`) — a registered name or a ``Backend``
+        instance; there is no string dispatch here.  The default
+        ``tiled`` backend compiles the whole model ONCE: the per-layer
+        forwards inline into a single jitted chain (XLA fuses across
+        layer boundaries), cached per input shape — repeat same-shape
+        requests re-trace nothing, see :attr:`trace_count`.
         """
-        if backend == "tiled":
-            if self._run_tiled is None:
-                self._run_tiled = jax.jit(
-                    lambda x: self._chain(x, lambda l, xx: l(xx)))
-            return self._run_tiled(jnp.asarray(batch, jnp.float32))
-        if backend in ("smm", "smm_kernel"):
-            kern = backend == "smm_kernel"
-
-            def step(l, x):
-                if l.kind == "conv":
-                    return l.smm_forward(x, kernel=kern)
-                return l(x)                       # linear: tiled path
-
-            return self._chain(batch, step)
-        raise ValueError(f"unknown backend {backend!r}")
+        return _backends.resolve(backend).run_model(self, batch)
 
     def reference(self, batch: jax.Array) -> jax.Array:
         """Dense float oracle (uncompressed weights)."""
@@ -545,23 +546,13 @@ def build_random_model(shapes: Sequence[ConvShape], n_out: int, *,
                        decode_source: str = "bitstream") -> CodrModel:
     """conv×len(shapes) → linear model with paper-style sparse Gaussian
     weights; consecutive shapes must be spatially consistent (each layer's
-    input channels = previous layer's output channels)."""
-    rng = np.random.default_rng(0) if rng is None else rng
-    layers: list[CodrConv2D | CodrLinear] = []
-    ri, ci = shapes[0].ri, shapes[0].ci
-    for i, s in enumerate(shapes):
-        w = rng.normal(size=(s.m, s.n, s.rk, s.ck)).astype(np.float32) * 0.5
-        w[rng.random(w.shape) > density] = 0
-        layers.append(CodrConv2D(w, stride=s.stride, t_m=t_m, t_n=t_n,
-                                 activation=activation, name=f"conv{i}",
-                                 decode_source=decode_source))
-        ri, ci = layers[-1].out_hw(ri, ci)
-        if ri < 1 or ci < 1:
-            raise ValueError(f"input {shapes[0].ri}x{shapes[0].ci} too small:"
-                             f" feature map vanishes at layer {i}")
-    feat = ri * ci * shapes[-1].m
-    wl = rng.normal(size=(n_out, feat)).astype(np.float32) * 0.1
-    wl[rng.random(wl.shape) > density] = 0
-    layers.append(CodrLinear(wl, t_m=min(256, n_out), name="fc",
-                             decode_source=decode_source))
-    return CodrModel(layers)
+    input channels = previous layer's output channels).
+
+    .. deprecated:: shim over ``ModelSpec.from_shapes`` + ``compile`` —
+        the weight generation and validation live there now.
+    """
+    from repro.core import api
+    spec = api.ModelSpec.from_shapes(shapes, n_out=n_out, density=density,
+                                     rng=rng, activation=activation)
+    cfg = api.EncodeConfig(t_m=t_m, t_n=t_n, decode_source=decode_source)
+    return api.compile(spec, cfg).model

@@ -407,19 +407,20 @@ def _grouped_rep_decode(streams) -> np.ndarray:
 
 
 def decode_layer(code, *, pad_to: int | None = None) -> np.ndarray:
-    """Decode every vector of a :class:`repro.core.ucr.LayerCode` in one
-    vectorized pass — the bulk counterpart of :func:`decode_vector` (which
-    stays as the parity oracle; tests assert bit-exact agreement).
+    """Decode every vector of a :class:`repro.core.ucr.LayerCode` — or of
+    a plain sequence of :class:`EncodedVector` (e.g. one tile's slice) —
+    in one vectorized pass: the bulk counterpart of :func:`decode_vector`
+    (which stays as the parity oracle; tests assert bit-exact agreement).
 
     Returns int8 ``(n_vectors, pad_to)``; row ``i`` equals
-    ``decode_vector(code.vectors[i])`` zero-padded to ``pad_to`` (default:
+    ``decode_vector(vectors[i])`` zero-padded to ``pad_to`` (default:
     the layer's max ``vector_len``).  All three structures decode without
     a per-field Python loop: escape streams via pointer-doubling offset
     resolution + shift/mask gathers, repetition streams via one arithmetic
     gather, running weights and Δ/absolute index mixes via segmented
     cumulative sums, and the final placement via one fancy-indexed scatter.
     """
-    vectors = code.vectors
+    vectors = getattr(code, "vectors", code)
     n_vec = len(vectors)
     max_len = max((v.vector_len for v in vectors), default=0)
     if pad_to is None:

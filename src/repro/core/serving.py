@@ -25,21 +25,9 @@ import numpy as np
 from repro.core import rle, ucr
 from repro.core.baselines import scnn_compress_bits, ucnn_compress_bits
 from repro.core.codr_linear import choose_bits
+from repro.core.ucr import restrict_unique  # noqa: F401  (canonical home)
 
 MIN_COMPRESS_SIZE = 1024           # skip tiny leaves (norms, biases)
-
-
-def restrict_unique(q: np.ndarray, n_unique: int) -> np.ndarray:
-    """Limit an int8 tensor to ``n_unique`` levels TOTAL including the
-    zero level (the paper's U knob; zero is counted here so a U-level
-    tensor packs into exactly ``log2(U)``-bit indices on TPU):
-    uniform re-quantization of the int8 grid, keeping 0 exactly 0."""
-    if n_unique >= 256:
-        return q
-    step = -(-256 // (n_unique - 1))           # ceil → ≤ n_unique-1 nonzero
-    out = (q.astype(np.int32) + 128) // step * step - 128 + step // 2
-    out = np.where(q == 0, 0, np.clip(out, -127, 127))
-    return out.astype(np.int8)
 
 
 @dataclasses.dataclass
@@ -151,7 +139,9 @@ def codr_report(reports: list[TensorReport]) -> str:
 # ---------------------------------------------------------------------------
 
 class CodrBatchServer:
-    """Batched inference over a :class:`repro.core.engine.CodrModel`.
+    """Batched inference over a CoDR executable (a
+    :class:`repro.core.engine.CodrModel` or a
+    :class:`repro.core.api.CompiledModel` — anything with ``.run``).
 
     Single-sample requests are queued and executed together in fixed-size
     batches, so every forward pass reuses the one jitted tile-dispatch
@@ -173,6 +163,7 @@ class CodrBatchServer:
         self.model = model
         self.max_batch = max_batch
         self._queue: list[np.ndarray] = []
+        self._next_id = 0                   # monotonic request-id counter
         self.batches_run = 0
         self.requests_served = 0
         self.bucket_counts: dict[int, int] = {}   # batch bucket → dispatches
@@ -184,9 +175,18 @@ class CodrBatchServer:
         return min(b, self.max_batch)
 
     def submit(self, x: np.ndarray) -> int:
-        """Queue one sample (no batch dim).  Returns its request id."""
+        """Queue one sample (no batch dim).  Returns its request id.
+
+        Ids come from a dedicated monotonic counter, NOT from
+        ``requests_served`` (which advances in *chunk* order during
+        :meth:`flush` — deriving ids from it let ids collide with
+        already-issued ones whenever a flush died mid-way).  An id is
+        issued exactly once, forever.
+        """
         self._queue.append(np.asarray(x, dtype=np.float32))
-        return self.requests_served + len(self._queue) - 1
+        rid = self._next_id
+        self._next_id += 1
+        return rid
 
     def flush(self) -> list[np.ndarray]:
         """Run all queued requests; returns outputs in submission order."""

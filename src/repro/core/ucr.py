@@ -27,8 +27,8 @@ from repro.core import rle
 
 __all__ = [
     "UCRVector", "ucr_transform", "ucr_reconstruct",
-    "quantize_int8", "dequantize_int8", "encode_conv_layer",
-    "encode_linear_layer", "LayerCode",
+    "quantize_int8", "dequantize_int8", "restrict_unique",
+    "encode_conv_layer", "encode_linear_layer", "LayerCode",
 ]
 
 
@@ -101,6 +101,19 @@ def dequantize_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
     return q.astype(np.float32) * scale
 
 
+def restrict_unique(q: np.ndarray, n_unique: int) -> np.ndarray:
+    """Limit an int8 tensor to ``n_unique`` levels TOTAL including the
+    zero level (the paper's U knob; zero is counted here so a U-level
+    tensor packs into exactly ``log2(U)``-bit indices on TPU):
+    uniform re-quantization of the int8 grid, keeping 0 exactly 0."""
+    if n_unique >= 256:
+        return q
+    step = -(-256 // (n_unique - 1))           # ceil → ≤ n_unique-1 nonzero
+    out = (q.astype(np.int32) + 128) // step * step - 128 + step // 2
+    out = np.where(q == 0, 0, np.clip(out, -127, 127))
+    return out.astype(np.int8)
+
+
 # ---------------------------------------------------------------------------
 # whole-layer encoding
 # ---------------------------------------------------------------------------
@@ -151,21 +164,41 @@ def _iter_tile_vectors(q: np.ndarray, t_m: int, t_n: int):
                 yield vec
 
 
-def encode_conv_layer(w: np.ndarray, *, t_m: int = 4, t_n: int = 4) -> LayerCode:
-    """Full offline pipeline for a conv weight ``(M, N, R_K, C_K)`` (float)."""
+def encode_conv_layer(w: np.ndarray, *, t_m: int = 4, t_n: int = 4,
+                      n_unique: int = 256,
+                      params: tuple[int, int, int] | None = None) -> LayerCode:
+    """Full offline pipeline for a conv weight ``(M, N, R_K, C_K)`` (float).
+
+    ``n_unique`` — the paper's U knob (Fig. 6): restrict the quantized
+    grid to ``n_unique`` total levels before the UCR transform.
+    ``params`` — optional fixed (delta, rep, index) RLE bit-lengths;
+    ``None`` runs the per-layer, per-structure search of §III-C.
+    """
     q, scale = quantize_int8(w)
+    if n_unique < 256:
+        q = restrict_unique(q, n_unique)
     ucrs = [ucr_transform(vec) for vec in _iter_tile_vectors(q, t_m, t_n)]
     vector_len = max((u.vector_len for u in ucrs), default=2)
-    params = rle.layer_params_search(ucrs, vector_len)
+    if params is None:
+        params = rle.layer_params_search(ucrs, vector_len)
+    else:
+        params = tuple(int(p) for p in params)
+        if len(params) != 3 or any(p < 1 for p in params):
+            raise ValueError(f"rle params must be 3 positive bit-lengths, "
+                             f"got {params}")
     vectors = [rle.encode_vector(u.unique_vals, u.reps, u.indexes,
                                  u.vector_len, params=params)
                for u in ucrs]
     return LayerCode(vectors, ucrs, tuple(w.shape), scale, t_m, t_n, params)
 
 
-def encode_linear_layer(w: np.ndarray, *, t_m: int = 256, t_n: int = 1) -> LayerCode:
+def encode_linear_layer(w: np.ndarray, *, t_m: int = 256, t_n: int = 1,
+                        n_unique: int = 256,
+                        params: tuple[int, int, int] | None = None
+                        ) -> LayerCode:
     """Linear layer ``(M, N)`` = conv with a 1×1 kernel."""
-    return encode_conv_layer(np.asarray(w)[:, :, None, None], t_m=t_m, t_n=t_n)
+    return encode_conv_layer(np.asarray(w)[:, :, None, None], t_m=t_m,
+                             t_n=t_n, n_unique=n_unique, params=params)
 
 
 def layer_code_size_only(w: np.ndarray, *, t_m: int = 4, t_n: int = 4) -> tuple[int, int]:

@@ -10,6 +10,17 @@ import jax
 from repro.core.codr_linear import PackedWeight
 from repro.kernels.codr_matmul.kernel import codr_matmul_pallas
 
+# Capability facts consumed by the backend registry
+# (repro.core.backends.CodrMatmulBackend) — this kernel only has a matmul
+# (linear-layer) datapath; conv layers never route here.
+KERNEL_CAPS = {
+    "kinds": ("linear",),
+    "integer_activations": False,  # float activations, f32 accumulation
+    "interpret_on_cpu": True,
+    "description": "Pallas fused decode+matmul (unique-index pack, "
+                   "output-stationary MXU tiles)",
+}
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"

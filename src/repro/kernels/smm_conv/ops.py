@@ -9,6 +9,19 @@ from repro.core.smm import decode_index
 from repro.core.ucr import LayerCode
 from repro.kernels.smm_conv.kernel import smm_conv_pallas
 
+# Capability facts consumed by the backend registry
+# (repro.core.backends.SmmKernelBackend) — kept next to the kernel so the
+# registry never hardcodes what a kernel can lower.
+KERNEL_CAPS = {
+    "kinds": ("conv",),            # this kernel only lowers convolutions
+    "max_stride": None,            # native strided crossbar routing
+    "integer_activations": True,   # 8-bit feature datapath (exact int math)
+    "batched_grid": True,          # batch = leading grid dimension
+    "interpret_on_cpu": True,
+    "description": "Pallas MPE/APE SMM convolution (batched grid; "
+                   "interpret mode off-TPU)",
+}
+
 
 def pack_smm_operands(code: LayerCode, n_in: int
                       ) -> tuple[np.ndarray, np.ndarray, dict]:

@@ -1,0 +1,271 @@
+"""Spec → compile → serve API (`repro.api`): compile-time capability
+checks, dense-oracle parity across strides / ragged tiles / every
+registered backend that claims support, and checkpoint (pytree)
+ingestion via ``ModelSpec.from_params``."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as codr
+from repro.core import backends as backends_mod
+from repro.core.engine import CodrConv2D, CodrModel
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _sparse(rng, shape, density=0.5, scale=0.5):
+    w = rng.normal(size=shape).astype(np.float32) * scale
+    w[rng.random(shape) > density] = 0
+    return w
+
+
+def _supported(compiled):
+    """Names of registered backends that claim support for the model."""
+    return [n for n in codr.available_backends()
+            if codr.get_backend(n).supports_model(compiled.model.layers)[0]]
+
+
+# ---------------------------------------------------------------------------
+# property test: compile(spec).run vs the dense oracle — strides 1–3,
+# ragged last output-channel tile, every backend that claims support
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2, 3])
+@pytest.mark.parametrize("m", [8, 10])          # 10 → ragged tile at t_m=4
+def test_compile_run_matches_oracle_all_backends(stride, m, rng):
+    w = _sparse(rng, (m, 3, 3, 3))
+    b = rng.normal(size=m).astype(np.float32)
+    spec = codr.ModelSpec([
+        codr.LayerSpec.conv(w, b, stride=stride, activation="relu",
+                            name="c0"),
+    ])
+    compiled = codr.compile(spec, codr.EncodeConfig())
+    compiled.verify_roundtrip()
+    # integer-valued activations: every backend (incl. the 8-bit feature
+    # datapaths) matches the dequantized oracle near-exactly
+    x = rng.integers(-8, 8, size=(2, 13, 13, 3)).astype(np.float32)
+    yq = np.asarray(compiled.quantized_reference(x))
+    names = _supported(compiled)
+    assert {"tiled", "smm", "smm_kernel"} <= set(names)
+    for name in names:
+        y = np.asarray(compiled.run(x, backend=name))
+        np.testing.assert_allclose(y, yq, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"backend {name}")
+    # float oracle within int8 quantization tolerance
+    yr = compiled.reference(x)
+    assert float(jnp.abs(compiled.run(x) - yr).max()
+                 / (jnp.abs(yr).max() + 1e-9)) < 0.08
+
+
+def test_compile_linear_only_spec_runs_on_codr_matmul(rng):
+    wl = _sparse(rng, (10, 24), density=0.7, scale=0.3)
+    spec = codr.ModelSpec([codr.LayerSpec.dense(wl, name="d0")])
+    compiled = codr.compile(spec, backend="codr_matmul")
+    x = rng.normal(size=(3, 24)).astype(np.float32)
+    y = np.asarray(compiled.run(x))
+    yq = np.asarray(compiled.quantized_reference(x))
+    np.testing.assert_allclose(y, yq, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# registry + capability checks
+# ---------------------------------------------------------------------------
+
+def test_compile_rejects_unsupported_backend_with_reason(rng):
+    spec = codr.ModelSpec([codr.LayerSpec.conv(_sparse(rng, (4, 2, 3, 3)))])
+    with pytest.raises(ValueError, match="no 'conv' path"):
+        codr.compile(spec, backend="codr_matmul")
+    with pytest.raises(ValueError, match="unknown backend"):
+        codr.compile(spec, backend="warp_drive")
+
+
+def test_run_backend_override_is_capability_checked(rng):
+    spec = codr.ModelSpec([codr.LayerSpec.conv(_sparse(rng, (4, 2, 3, 3)))])
+    compiled = codr.compile(spec)
+    x = rng.integers(-4, 5, size=(1, 8, 8, 2)).astype(np.float32)
+    compiled.run(x)                                   # default backend fine
+    with pytest.raises(ValueError, match="no 'conv' path"):
+        compiled.run(x, backend="codr_matmul")
+
+
+def test_register_custom_backend_and_dispatch(rng):
+    class NegatingBackend(backends_mod.Backend):
+        name = "test_negate"
+        caps = backends_mod.BackendCaps(description="test-only")
+
+        def conv(self, layer, x):
+            return -layer(x)
+
+        def linear(self, layer, x):
+            return -layer(x)
+
+    be = backends_mod.register(NegatingBackend())
+    try:
+        w = _sparse(rng, (4, 2, 3, 3))
+        model = CodrModel([CodrConv2D(w, t_m=2)])
+        x = rng.normal(size=(1, 6, 6, 2)).astype(np.float32)
+        # both the engine entry point and the compiled wrapper see it
+        np.testing.assert_allclose(
+            np.asarray(model.run(x, backend="test_negate")),
+            -np.asarray(model.run(x)), rtol=1e-6, atol=1e-6)
+        with pytest.raises(ValueError, match="already registered"):
+            backends_mod.register(NegatingBackend())
+        backends_mod.register(NegatingBackend(), overwrite=True)
+    finally:
+        backends_mod._REGISTRY.pop("test_negate", None)
+    assert be.name not in codr.available_backends()
+
+
+# ---------------------------------------------------------------------------
+# EncodeConfig knobs
+# ---------------------------------------------------------------------------
+
+def test_encode_config_n_unique_restricts_levels_and_shrinks_code(rng):
+    w = _sparse(rng, (16, 4, 3, 3), density=0.9)
+    spec = codr.ModelSpec([codr.LayerSpec.conv(w, name="c0")])
+    full = codr.compile(spec, codr.EncodeConfig())
+    small = codr.compile(spec, codr.EncodeConfig(n_unique=8))
+    small.verify_roundtrip()                  # roundtrip honors the U knob
+    q = small.model.layers[0].decoded_weights()
+    assert len(np.unique(q[q != 0])) <= 8
+    assert small.total_bits() < full.total_bits()
+    st = small.stats()[0]
+    assert st.n_unique <= full.stats()[0].n_unique
+
+
+def test_encode_config_fixed_rle_params_roundtrip(rng):
+    w = _sparse(rng, (8, 3, 3, 3))
+    spec = codr.ModelSpec([codr.LayerSpec.conv(w, name="c0")])
+    cfg = codr.EncodeConfig(rle_params=(4, 4, 4))
+    compiled = codr.compile(spec, cfg)
+    compiled.verify_roundtrip()               # fixed params still lossless
+    assert compiled.model.layers[0].code.params == (4, 4, 4)
+    assert cfg.metadata()["rle_params"] == [4, 4, 4]
+
+
+def test_encode_config_validation():
+    with pytest.raises(ValueError, match="n_unique"):
+        codr.EncodeConfig(n_unique=1)
+    # n_unique=2 leaves only the zero level (every weight collapses to 0
+    # under restrict_unique) — a silently dead model, rejected up front
+    with pytest.raises(ValueError, match="n_unique"):
+        codr.EncodeConfig(n_unique=2)
+    with pytest.raises(ValueError, match="decode_source"):
+        codr.EncodeConfig(decode_source="telepathy")
+
+
+# ---------------------------------------------------------------------------
+# spec construction + validation
+# ---------------------------------------------------------------------------
+
+def test_model_spec_validates_chain(rng):
+    c0 = codr.LayerSpec.conv(_sparse(rng, (4, 3, 3, 3)), name="c0")
+    bad = codr.LayerSpec.conv(_sparse(rng, (4, 5, 3, 3)), name="c1")
+    with pytest.raises(ValueError, match="input channels"):
+        codr.ModelSpec([c0, bad])
+    d = codr.LayerSpec.dense(_sparse(rng, (4, 8)), name="fc")
+    with pytest.raises(ValueError, match="precede"):
+        codr.ModelSpec([d, c0])
+    with pytest.raises(ValueError, match="4-D"):
+        codr.LayerSpec.conv(_sparse(rng, (4, 8)))
+    with pytest.raises(ValueError, match="bias"):
+        codr.LayerSpec.conv(_sparse(rng, (4, 3, 3, 3)),
+                            np.zeros(5, np.float32))
+
+
+def test_from_shapes_matches_build_random_model(rng):
+    """The deprecated builder is a shim over from_shapes + compile — the
+    same rng must produce the identical model."""
+    from repro.core.dataflow import ConvShape
+    from repro.core.engine import build_random_model
+    shapes = [ConvShape(6, 3, 3, 3, 10, 10, 1)]
+    m1 = build_random_model(shapes, n_out=4, density=0.5,
+                            rng=np.random.default_rng(7))
+    spec = codr.ModelSpec.from_shapes(shapes, n_out=4, density=0.5,
+                                      rng=np.random.default_rng(7))
+    m2 = codr.compile(spec).model
+    x = rng.normal(size=(2, 10, 10, 3)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(m1.run(x)),
+                               np.asarray(m2.run(x)), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint ingestion: from_params → compile → run from bitstreams
+# ---------------------------------------------------------------------------
+
+def test_from_params_pytree_end_to_end(rng):
+    """Acceptance: a repro.models-style conv/dense params pytree executes
+    end-to-end from the bitstreams with dense-oracle parity."""
+    params = {
+        "conv0": {"w": _sparse(rng, (8, 3, 3, 3)),
+                  "b": rng.normal(size=8).astype(np.float32)},
+        "conv1": {"w": _sparse(rng, (12, 8, 3, 3))},
+        "fc": {"w": _sparse(rng, (8 * 8 * 12, 6), scale=0.1)},
+    }
+    spec = codr.ModelSpec.from_params(
+        params, activation={"conv0": "relu", "conv1": "relu"},
+        linear_layout="in_out")
+    assert [ls.name for ls in spec] == ["conv0", "conv1", "fc"]
+    assert spec.layers[0].bias is not None
+    assert spec.layers[2].weight.shape == (6, 8 * 8 * 12)   # transposed
+
+    compiled = codr.compile(spec, codr.EncodeConfig(n_unique=16))
+    compiled.verify_roundtrip()               # bitstreams are lossless
+    assert compiled.bits_per_weight() < 8.0   # beats raw int8
+
+    x = rng.normal(size=(2, 12, 12, 3)).astype(np.float32)
+    y = compiled.run(x)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(compiled.quantized_reference(x)),
+                               rtol=1e-3, atol=1e-3)
+    # every registry backend that claims support agrees on int inputs
+    xi = rng.integers(-5, 6, size=(2, 12, 12, 3)).astype(np.float32)
+    yt = np.asarray(compiled.run(xi))
+    for name in _supported(compiled):
+        yb = np.asarray(compiled.run(xi, backend=name))
+        rel = np.abs(yb - yt).max() / (np.abs(yt).max() + 1e-9)
+        assert rel < 0.05, f"backend {name}: rel err {rel}"
+
+
+def test_from_params_numbered_layers_keep_natural_order(rng):
+    """JAX flattens dicts in sorted-key order ('conv10' < 'conv2');
+    ingestion must re-establish the numeric sequence."""
+    params = {f"conv{i}": {"w": _sparse(rng, (4, 4, 3, 3))}
+              for i in range(12)}
+    spec = codr.ModelSpec.from_params(params)
+    assert [ls.name for ls in spec] == [f"conv{i}" for i in range(12)]
+
+
+def test_from_params_same_shape_weights_consume_distinct_biases(rng):
+    """Two same-shaped weights in one subtree must each get their own
+    bias (pairing consumes), never share the first match."""
+    b1 = rng.normal(size=4).astype(np.float32)
+    b2 = rng.normal(size=4).astype(np.float32)
+    params = {"blk": {"w_a": _sparse(rng, (4, 6)), "b_a": b1,
+                      "w_b": _sparse(rng, (4, 6)), "b_b": b2}}
+    spec = codr.ModelSpec.from_params(params)
+    got = sorted(tuple(ls.bias) for ls in spec.layers)
+    assert got == sorted([tuple(b1), tuple(b2)])
+
+
+def test_from_params_flat_arrays_and_stride(rng):
+    params = [_sparse(rng, (4, 2, 3, 3)), _sparse(rng, (6, 4, 3, 3))]
+    spec = codr.ModelSpec.from_params(params, stride={"0": 2})
+    assert spec.layers[0].stride == 2 and spec.layers[1].stride == 1
+    with pytest.raises(ValueError, match="no 2-D/4-D"):
+        codr.ModelSpec.from_params({"scalars": {"a": np.zeros(3)}})
+
+
+def test_compiled_model_serves_requests(rng):
+    spec = codr.ModelSpec([codr.LayerSpec.conv(_sparse(rng, (4, 2, 3, 3)),
+                                               activation="relu")])
+    compiled = codr.compile(spec)
+    server = compiled.serve(max_batch=4)
+    xs = [rng.normal(size=(8, 8, 2)).astype(np.float32) for _ in range(6)]
+    outs = server.serve(xs)
+    direct = np.asarray(compiled.run(jnp.asarray(np.stack(xs))))
+    for got, want in zip(outs, direct):
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

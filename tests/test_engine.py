@@ -49,6 +49,37 @@ def test_bitstream_roundtrip_conv(shape, density, rng):
     assert np.array_equal(decode_all_tiles(code, source="ucr"), tiles)
 
 
+def _decode_tile_scalar_oracle(code, mt):
+    """The per-vector scalar decode loop (``rle.decode_vector`` per
+    (tile, channel) vector) — retired from the engine in favor of the
+    vectorized bulk path; kept HERE as the parity oracle."""
+    import numpy as _np
+    from repro.core import rle as _rle
+    n = code.shape[1]
+    rk, ck = (code.shape[2], code.shape[3]) if len(code.shape) == 4 else (1, 1)
+    tm_eff = min(code.t_m, code.shape[0] - mt * code.t_m)
+    w = _np.zeros((code.t_m, n, rk, ck), dtype=_np.int8)
+    for nn in range(n):
+        vec = _rle.decode_vector(code.vectors[mt * n + nn])
+        w[:tm_eff, nn] = vec.reshape(tm_eff, rk, ck)
+    return w
+
+
+@pytest.mark.parametrize("shape,t_m", [((8, 4, 3, 3), 4), ((10, 3, 3, 3), 4),
+                                       ((5, 2, 2, 2), 2)])
+def test_decode_tile_matches_scalar_oracle(shape, t_m, rng):
+    """engine.decode_tile now routes through the vectorized bulk decoder
+    (rle.decode_layer); every tile — including the ragged last one — must
+    be bit-identical to the scalar per-vector loop."""
+    from repro.core.engine import decode_tile
+    w = _sparse_weights(rng, shape, density=0.5)
+    code = ucr.encode_conv_layer(w, t_m=t_m, t_n=2)
+    n_tiles = -(-shape[0] // t_m)
+    for mt in range(n_tiles):
+        assert np.array_equal(decode_tile(code, mt),
+                              _decode_tile_scalar_oracle(code, mt)), mt
+
+
 @pytest.mark.parametrize("density", [0.1, 0.5, 0.9])
 def test_bitstream_roundtrip_linear(density, rng):
     w = _sparse_weights(rng, (24, 16), density)

@@ -3,6 +3,7 @@ quantized-serving consistency, HLO collective analysis."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, smoke_variant
 from repro.core.serving import (codr_compress_params, codr_report,
@@ -45,6 +46,37 @@ def test_codr_compress_params_end_to_end(key):
     tot_w = sum(r.n_weights for r in reports)
     tot_bits = sum(r.codr_bits for r in reports)
     assert tot_bits / tot_w < 8.0
+
+
+def test_batch_server_ids_monotonic_across_flushes_and_failures(rng):
+    """Request ids come from a dedicated monotonic counter: interleaved
+    submit/flush cycles issue consecutive ids, and a flush that dies
+    mid-way must never lead to an already-issued id being reissued (the
+    old ``requests_served + queue position`` scheme collided here,
+    because ``requests_served`` advances in chunk order during flush)."""
+    from repro.core.dataflow import ConvShape
+    from repro.core.engine import build_random_model
+    from repro.core.serving import CodrBatchServer
+
+    model = build_random_model([ConvShape(4, 2, 3, 3, 8, 8, 1)], n_out=3,
+                               density=0.8, rng=rng)
+    server = CodrBatchServer(model, max_batch=2)
+    issued = []
+    good = rng.normal(size=(8, 8, 2)).astype(np.float32)
+    issued += [server.submit(good) for _ in range(3)]
+    server.flush()
+    issued += [server.submit(good) for _ in range(2)]
+    server.flush()
+    # a flush that fails mid-way: first chunk (2 good) serves, then a
+    # malformed sample kills the dispatch of its own chunk
+    issued += [server.submit(good) for _ in range(2)]
+    bad = rng.normal(size=(3, 3, 2)).astype(np.float32)   # kernel > input
+    issued.append(server.submit(bad))
+    with pytest.raises(Exception):
+        server.flush()
+    issued += [server.submit(good) for _ in range(2)]
+    server.flush()
+    assert issued == list(range(len(issued)))   # monotonic, no collisions
 
 
 def test_serving_stats_ordering():
