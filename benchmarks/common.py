@@ -3,7 +3,7 @@ paper's §V-A methodology — "(we) evaluate four weight densities by
 randomly eliminating the non-zero weights and study different numbers of
 unique weights by making the 8 − log2(U) least significant bits of
 weights zero" — applied to Gaussian-initialized tensors (no pretrained
-checkpoints ship offline; DESIGN.md notes the substitution: ratios, not
+checkpoints ship offline; docs/DESIGN.md §6 notes the substitution: ratios, not
 absolute rates, are the reproduction target)."""
 from __future__ import annotations
 

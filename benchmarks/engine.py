@@ -7,10 +7,17 @@ Exercises the spec → compile → serve API (``repro.api``): a declarative
 ``ModelSpec`` on paper-CNN geometry is compiled once under an explicit
 ``EncodeConfig``, then driven through the offline bitstream decode, the
 one-time compile, the steady-state (post-compile) forward — the
-serving-relevant figure — and the batched request path.  CSV lines (the
-harness format): ``name,us_per_call,derived``; the JSON summary (default
-``BENCH_engine.json``) is stamped with the git SHA and the encode-config
-metadata so the perf trajectory stays comparable PR over PR.
+serving-relevant figure — and the batched request path, in all four
+serving modes: the fused ``tiled`` backend, the ``sharded``
+tile-parallel executor (over however many local devices the host
+exposes — force more with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``), the
+synchronous bucketed batch server, and the async futures path
+(``submit_async`` + background flush loop).  CSV lines (the harness
+format): ``name,us_per_call,derived``; the JSON summary (default
+``BENCH_engine.json``) is stamped with the git SHA and the
+encode-config metadata so the perf trajectory stays comparable PR over
+PR.
 """
 from __future__ import annotations
 
@@ -81,6 +88,20 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
                    f"bits_per_weight={compiled.bits_per_weight():.2f};"
                    f"steady_state=post_compile"))
 
+    # sharded tile-parallel executor (same compiled model, backend
+    # override; 1-element mesh = the single-device fallback)
+    import jax
+    n_dev = len(jax.devices())
+    np.asarray(compiled.run(x, backend="sharded"))   # compile + shard once
+    with Timer() as t_shard:
+        for _ in range(iters):
+            y_sh = compiled.run(x, backend="sharded")
+        y_sh.block_until_ready()
+    us_shard = t_shard.dt / iters * 1e6
+    print(csv_line("engine_forward_sharded", us_shard,
+                   f"imgs_per_s={batch * iters / t_shard.dt:.1f};"
+                   f"devices={n_dev};batch={batch}"))
+
     server = compiled.serve(max_batch=batch)
     samples = [rng.normal(size=(*hw, n_in)).astype(np.float32)
                for _ in range(batch + 3)]
@@ -92,6 +113,20 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
                    f"requests={len(outs)};"
                    f"batches={server.batches_run - batches_before};"
                    f"buckets={len(server.bucket_counts)}"))
+
+    # async futures path: background flush loop, max_batch load trigger,
+    # double-buffered staging — same request stream as the sync server
+    aserver = compiled.serve(max_batch=batch, flush_deadline_s=0.005)
+    with aserver:
+        [f.result() for f in [aserver.submit_async(s) for s in samples]]
+        abatches_before = aserver.batches_run
+        with Timer() as t_async:
+            futs = [aserver.submit_async(s) for s in samples]
+            outs_a = [f.result() for f in futs]
+    print(csv_line("engine_serve_async", t_async.dt / len(outs_a) * 1e6,
+                   f"requests={len(outs_a)};"
+                   f"batches={aserver.batches_run - abatches_before};"
+                   f"deadline_s={aserver.flush_deadline_s}"))
 
     for name, acc in compiled.sram_report(hw):
         print(csv_line(f"engine_sram_{name}", 0.0,
@@ -107,7 +142,11 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
         "compile_s": t_compile.dt,
         "steady_us_per_call": us,
         "imgs_per_s": imgs_s,
+        "sharded_us_per_call": us_shard,
+        "sharded_imgs_per_s": batch * iters / t_shard.dt,
+        "n_devices": n_dev,
         "serve_us_per_request": t_srv.dt / len(outs) * 1e6,
+        "serve_async_us_per_request": t_async.dt / len(outs_a) * 1e6,
         "bits_per_weight": compiled.bits_per_weight(),
         "trace_count": compiled.trace_count,
     }

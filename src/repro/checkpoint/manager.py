@@ -14,7 +14,7 @@ Design (orbax-free, stdlib + numpy only):
   critical path; ``wait()`` joins before the next save or exit.
 * **Elastic restore** — leaves are loaded host-side and re-placed with
   ``jax.device_put`` against whatever sharding the *new* mesh prescribes,
-  so a checkpoint taken on N hosts restores onto M ≠ N hosts (DESIGN.md
+  so a checkpoint taken on N hosts restores onto M ≠ N hosts (docs/DESIGN.md
   §5 elastic re-mesh).
 """
 from __future__ import annotations

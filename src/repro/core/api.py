@@ -19,10 +19,13 @@ accelerators with (compressed format → dataflow plan → PE execution):
    a :class:`CompiledModel`: an executable with ``.run`` (from the
    bitstreams), ``.reference`` / ``.quantized_reference`` (oracles),
    ``.stats`` / ``.sram_report`` (accounting), and ``.serve`` (the
-   batched request path).  The execution backend is a first-class,
-   registry-resolved object (:mod:`repro.core.backends`); capability
-   mismatches (stride limits, linear-only kernels) fail at compile time
-   with the reason.
+   batched request path, sync and async).  The execution backend is a
+   first-class, registry-resolved object (:mod:`repro.core.backends` —
+   its module docstring has a worked "register your own backend"
+   example); capability mismatches (stride limits, linear-only kernels)
+   fail at compile time with the reason, and the ``sharded`` backend
+   scales the tile dispatch across local devices
+   (``docs/DESIGN.md`` §3).
 
 Import as ``repro.api``::
 
@@ -322,7 +325,17 @@ class EncodeConfig:
 class CompiledModel:
     """The executable a :func:`compile` call returns: encode happened
     exactly once, every ``run`` executes from the stored bitstreams via
-    the backend bound at compile time (overridable per call)."""
+    the backend bound at compile time (overridable per call).
+
+    Input/output conventions (shared by ``run`` and both oracles):
+    batches are float32, NHWC ``(B, RI, CI, N)`` when the first layer is
+    a conv (``N`` = its input channels) or ``(B, N)`` for linear-only
+    models; activations auto-flatten to ``(B, features)`` at the
+    conv→linear boundary.  Outputs are ``(B, out_features)`` of the last
+    layer (or NHWC for conv-only models).  Non-float inputs are cast;
+    integer-activation backends (``smm``/``smm_kernel``) quantize
+    non-integer inputs to int8 internally.
+    """
 
     def __init__(self, model: "_engine.CodrModel", spec: ModelSpec,
                  config: EncodeConfig, backend: _backends.Backend):
@@ -333,8 +346,16 @@ class CompiledModel:
 
     # -- execution ----------------------------------------------------------
     def run(self, batch, *, backend=None) -> jax.Array:
-        """Forward a batch from the RLE bitstreams.  ``backend`` (name or
-        instance) overrides the compile-time choice for this call."""
+        """Forward a batch from the RLE bitstreams.
+
+        ``backend`` (a registered name or a ``Backend`` instance)
+        overrides the compile-time choice for this call only; the
+        override is capability-checked against the model first, so a
+        ``ValueError`` with the reason — unknown name, unsupported
+        stride, linear-only kernel handed a conv — is raised *before*
+        any dispatch.  Shapes per the class docstring; the first call
+        per (backend, input shape) pays that backend's compile cost,
+        repeats hit its cache."""
         be = self.backend if backend is None else _backends.resolve(backend)
         if be is not self.backend:
             ok, reason = be.supports_model(self.model.layers)
@@ -345,38 +366,69 @@ class CompiledModel:
     __call__ = run
 
     def reference(self, batch) -> jax.Array:
-        """Dense float oracle (original uncompressed weights)."""
+        """Dense float oracle: the ORIGINAL uncompressed weights through
+        dense ``lax.conv``/matmul.  ``run`` matches this within int8
+        quantization tolerance (tighter as ``n_unique`` grows)."""
         return self.model.reference(batch)
 
     def quantized_reference(self, batch) -> jax.Array:
         """Dense oracle on the dequantized decoded weights — ``run`` must
-        match this up to float summation order."""
+        match this up to float summation order (and bit-for-bit for
+        integer-valued inputs on the integer datapaths)."""
         return self.model.quantized_reference(batch)
 
-    def serve(self, *, max_batch: int = 8):
+    def serve(self, *, max_batch: int = 8, flush_deadline_s: float = 0.01):
         """Batched request path over this executable
-        (:class:`repro.core.serving.CodrBatchServer`)."""
+        (:class:`repro.core.serving.CodrBatchServer`).
+
+        ``max_batch``         dispatch size cap AND the async path's load
+                              trigger.
+        ``flush_deadline_s``  async latency trigger: the longest a
+                              pending :meth:`CodrBatchServer.submit_async`
+                              request waits before a partial batch is
+                              flushed anyway.
+
+        The synchronous path (``submit``/``flush``) ignores the deadline —
+        the caller owns batching cadence there.
+        """
         from repro.core.serving import CodrBatchServer
-        return CodrBatchServer(self, max_batch=max_batch)
+        return CodrBatchServer(self, max_batch=max_batch,
+                               flush_deadline_s=flush_deadline_s)
 
     # -- accounting ---------------------------------------------------------
     @property
     def trace_count(self) -> int:
+        """Total layer (re-)traces of the ``tiled`` dispatch — the
+        compile-once regression signal: flat across repeat same-shape
+        requests, +1 per layer per new input shape."""
         return self.model.trace_count
 
     def stats(self):
+        """Per-layer :class:`repro.core.engine.LayerStats` (real encoded
+        bits from the bitstreams, density, unique counts)."""
         return self.model.stats()
 
     def total_bits(self) -> int:
+        """Real encoded size of the whole model, in bits — counted on
+        the variable-width RLE streams (docs/DESIGN.md §2), not on any
+        execution-side representation."""
         return self.model.total_bits()
 
     def bits_per_weight(self) -> float:
+        """``total_bits`` over the weight count — the paper's Fig. 6
+        compression metric."""
         return self.model.bits_per_weight()
 
     def sram_report(self, input_hw, **kw):
+        """Per-layer SRAM access estimates (paper §IV) for one sample of
+        spatial size ``input_hw = (RI, CI)``; spatial dims are tracked
+        through the conv stack automatically."""
         return self.model.sram_report(input_hw, **kw)
 
     def verify_roundtrip(self) -> None:
+        """Assert decode(bitstreams) == quantize(original floats) for
+        every layer; raises ``AssertionError`` naming the first layer
+        that mismatches.  Cheap — run it whenever in doubt."""
         self.model.verify_roundtrip()
 
     def __repr__(self) -> str:

@@ -26,6 +26,38 @@ Built-ins registered at import:
 ``smm``          NumPy faithful MPE/APE execution (integer activations)
 ``smm_kernel``   Pallas MPE/APE kernel, batch in the grid (integer acts)
 ``codr_matmul``  Pallas fused decode+matmul (linear-only models)
+``sharded``      shard_map tile-parallel executor over all local devices
+
+Registering your own backend (worked example)::
+
+    import jax, repro.api as codr
+
+    class DenseDemoBackend(codr.Backend):
+        '''Executes the decoded tile stack as one dense conv per layer
+        — the minimal real backend.  The layer surface it relies on
+        (``code`` / ``kind`` / ``stride`` / ``tiles_device`` plus the
+        shared :meth:`Backend.finish` epilogue) is all any backend
+        needs.'''
+
+        name = "dense_demo"
+        caps = codr.BackendCaps(max_stride=1,
+                                description="toy dense executor")
+
+        def conv(self, layer, x):
+            t = layer.tiles_device                   # (T, t_m, N, RK, CK)
+            w = t.reshape(-1, *t.shape[2:])[: layer.code.shape[0]]
+            y = jax.lax.conv_general_dilated(
+                x, w, window_strides=(1, 1), padding="VALID",
+                dimension_numbers=("NHWC", "OIHW", "NHWC"))
+            return self.finish(layer, y * layer.code.scale)
+
+    codr.register(DenseDemoBackend())
+    compiled = codr.compile(spec, cfg, backend="dense_demo")  # just works
+
+``compile`` now capability-checks specs against it (stride 2 convs are
+rejected at compile time with the reason, because of ``max_stride=1``),
+and every surface accepting a backend name — ``CompiledModel.run``,
+``CodrModel.run``, benchmarks — can select it.
 """
 from __future__ import annotations
 
@@ -36,12 +68,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:                                   # jax >= 0.6 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                    # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import PartitionSpec as _P
+
 from repro.core import smm, ucr
 
 __all__ = [
     "Backend", "BackendCaps", "available_backends", "get_backend",
     "register", "resolve", "TiledBackend", "SmmBackend",
-    "SmmKernelBackend", "CodrMatmulBackend",
+    "SmmKernelBackend", "CodrMatmulBackend", "ShardedBackend",
 ]
 
 
@@ -102,14 +140,42 @@ def _int_activations(x) -> tuple[np.ndarray, float]:
 class Backend(abc.ABC):
     """One way to execute CoDR layers.  Layers are duck-typed
     (:class:`repro.core.engine.CodrConv2D` / ``CodrLinear`` or anything
-    exposing the same ``code`` / ``kind`` / ``stride`` surface)."""
+    exposing the same ``code`` / ``kind`` / ``stride`` surface).
+
+    The contract, in full:
+
+    * Subclasses MUST set a non-empty ``name`` (the registry key), a
+      ``caps`` :class:`BackendCaps` describing what they execute, and
+      implement :meth:`conv`.  :meth:`linear` defaults to the layer's
+      own fused tiled matmul (declare ``"linear"`` in
+      ``caps.fallback_kinds`` when relying on that).
+    * Callers MUST gate on :meth:`supports` /
+      :meth:`supports_model` before executing — ``compile`` and
+      ``CompiledModel.run(backend=...)`` do, so an execution method may
+      assume its layer passed the capability check and is free to fail
+      arbitrarily (not just ``ValueError``) on layers that did not.
+    * Numerics: every datapath must end with the shared
+      :meth:`finish` epilogue (bias, then activation) in that op order —
+      cross-backend parity tests depend on it.  Integer-activation
+      backends (``caps.integer_activations``) additionally quantize
+      non-integer inputs to int8 first; their outputs match the
+      dequantized oracle only near-exactly, not bit-for-bit.
+    """
 
     name: str = ""
     caps: BackendCaps = BackendCaps()
 
     # -- capability queries -------------------------------------------------
     def supports(self, layer) -> tuple[bool, str]:
-        """``(ok, reason)`` — can this backend execute ``layer``?"""
+        """``(ok, reason)`` — can this backend execute ``layer``?
+
+        ``ok=False`` comes with a human-readable ``reason`` (the string
+        ``compile`` raises with).  The default implementation checks
+        ``caps``: the layer kind must be native or a declared fallback,
+        and a conv layer's stride must not exceed ``caps.max_stride``.
+        Override for capability rules the flags cannot express; never
+        raise from here — report, don't throw.
+        """
         if not self.caps.supports_kind(layer.kind):
             return False, (f"backend {self.name!r} has no {layer.kind!r} "
                            f"path (native: {sorted(self.caps.native_kinds)})")
@@ -121,6 +187,8 @@ class Backend(abc.ABC):
         return True, ""
 
     def supports_model(self, layers) -> tuple[bool, str]:
+        """``(ok, reason)`` over a whole layer stack: the first failing
+        layer's reason, or ``(True, "")`` when every layer passes."""
         for layer in layers:
             ok, reason = self.supports(layer)
             if not ok:
@@ -130,23 +198,43 @@ class Backend(abc.ABC):
     # -- execution ----------------------------------------------------------
     @abc.abstractmethod
     def conv(self, layer, x: jax.Array) -> jax.Array:
-        """Forward one conv layer: NHWC ``(B, RI, CI, N)`` → NHWC out."""
+        """Forward one conv layer from its code.
+
+        ``x`` is NHWC ``(B, RI, CI, N)``; returns NHWC
+        ``(B, RO, CO, M)`` float32 with VALID padding and the layer's
+        stride, scale, bias, and activation applied (end with
+        :meth:`finish`).  May assume :meth:`supports` passed."""
 
     def linear(self, layer, x: jax.Array) -> jax.Array:
-        """Forward one linear layer ``(B, N)`` → ``(B, M)``.  Default:
-        the layer's own fused tiled matmul."""
+        """Forward one linear layer, ``(B, N)`` → ``(B, M)`` float32,
+        scale/bias/activation applied.  Default: delegate to the layer's
+        own fused tiled matmul (the ``fallback_kinds`` path)."""
         return layer(x)
 
     def step(self, layer, x: jax.Array) -> jax.Array:
+        """Dispatch one layer by ``layer.kind``.  Raises ``ValueError``
+        on kinds that are neither ``"conv"`` nor ``"linear"`` — kinds
+        the capability check already rejects for built-ins."""
         if layer.kind == "conv":
             return self.conv(layer, x)
         if layer.kind == "linear":
             return self.linear(layer, x)
         raise ValueError(f"unknown layer kind {layer.kind!r}")
 
+    def finish(self, layer, y: jax.Array) -> jax.Array:
+        """The shared epilogue every datapath appends after its
+        accumulators drain: ``+ bias`` (if any), then the activation.
+        Public so custom backends reproduce the exact op order —
+        bit-for-bit parity across backends depends on it."""
+        return _finish(layer, y)
+
     def run_model(self, model, batch: jax.Array) -> jax.Array:
         """Forward a batch through a :class:`~repro.core.engine.CodrModel`
-        (or any object exposing ``_chain``)."""
+        (or any object exposing ``_chain``): casts to float32, chains
+        :meth:`step` over the layers, auto-flattening at the
+        conv→linear boundary.  Override to add whole-model structure
+        (the ``tiled``/``sharded`` backends jit the entire chain once
+        and cache it on the model)."""
         return model._chain(jnp.asarray(batch, jnp.float32), self.step)
 
 
@@ -176,6 +264,9 @@ def available_backends() -> tuple[str, ...]:
 
 
 def get_backend(name: str) -> Backend:
+    """Look up a registered backend by name.  Raises ``ValueError``
+    naming the registered alternatives on a miss — the same error
+    surface ``compile(..., backend="typo")`` shows."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -317,7 +408,138 @@ class CodrMatmulBackend(Backend):
         return _finish(layer, y)
 
 
+class ShardedBackend(Backend):
+    """Tile-parallel scale-out executor: each layer's decoded tile stack
+    is partitioned across devices over the **output-tile axis** — the
+    CoDR loop nest's natural model-parallel dimension, since every
+    output-channel tile's results are produced exactly once (output
+    stationary) while the input is broadcast to all tiles (semi input
+    stationary, paper §III-B).  Mapping that dataflow onto a mesh:
+
+    * the tile stack ``(n_tiles, t_m, N, RK, CK)`` is zero-padded to a
+      multiple of the device count and ``jax.device_put`` once, sharded
+      over its leading axis (:func:`repro.sharding.rules.shard_leading`);
+    * the forward is a ``shard_map`` over the 1-D ``tile`` mesh
+      (:func:`repro.sharding.rules.tile_mesh`): every device runs ONE
+      ``lax.conv`` / matmul on its local tile slice with the batch
+      replicated, and the output concatenates over the channel axis with
+      no cross-device collective in the hot loop;
+    * pad channels are cropped and the scale/bias/activation epilogue is
+      applied on the gathered output — elementwise, so results are
+      **bit-for-bit identical** to the ``tiled`` backend's fused
+      single-device dispatch (per-output-channel reductions are
+      independent of the channel split).
+
+    On a single device the 1-element mesh makes ``shard_map`` the
+    identity partitioning — the fallback that keeps 1-device CI green —
+    and the same code scales to any local device count, including a
+    forced host-platform mesh
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    Constructor args:
+        ``mesh``: a 1-D :class:`jax.sharding.Mesh` whose only axis is
+        the tile axis; ``None`` (default) builds one over all local
+        devices on first use.  Pass an explicit mesh to pin the executor
+        to a device subset: ``register(ShardedBackend(mesh, name="..."))``.
+    """
+
+    name = "sharded"
+    caps = BackendCaps(description="shard_map tile-parallel dispatch over "
+                                   "the output-tile axis, any stride, "
+                                   "float datapath, 1-device fallback")
+
+    def __init__(self, mesh=None, *, name: str | None = None):
+        self._mesh = mesh
+        if name is not None:
+            self.name = name
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.sharding import rules
+            self._mesh = rules.tile_mesh()
+        return self._mesh
+
+    @property
+    def n_devices(self) -> int:
+        from repro.sharding import rules
+        return self.mesh.shape[rules.ENGINE_TILE_AXIS]
+
+    # -- per-layer preparation ---------------------------------------------
+    def _prepare(self, layer):
+        """Shard ``layer``'s decoded tiles over the mesh (once per layer
+        per mesh) and build the jitted shard_map forward.  Cached on the
+        layer — repeat dispatches reuse the committed device buffers."""
+        state = getattr(layer, "_shard_state", None)
+        # Mesh defines value equality: an equal-but-distinct mesh (two
+        # backends built over the same devices) still hits the cache
+        if state is not None and state[0] == self.mesh:
+            return state
+        from repro.sharding import rules
+        axis = rules.ENGINE_TILE_AXIS
+        mesh = self.mesh
+        t = layer.tiles.astype(np.float32)    # (n_tiles, t_m, N[, RK, CK])
+        if layer.kind == "linear":
+            t = t.reshape(t.shape[0], t.shape[1], -1)
+        w_sh = rules.shard_leading(t, mesh, axis=axis)
+        scale = float(np.asarray(layer.code.scale))
+        m = layer.code.shape[0]
+
+        if layer.kind == "conv":
+            stride = (layer.stride, layer.stride)
+
+            def local(x, tiles):
+                # local slice (n_tiles/D, t_m, N, RK, CK) → one conv per
+                # device; out_spec concatenates over the channel axis
+                w = tiles.reshape(tiles.shape[0] * tiles.shape[1],
+                                  *tiles.shape[2:])
+                return jax.lax.conv_general_dilated(
+                    x, w, window_strides=stride, padding="VALID",
+                    dimension_numbers=("NHWC", "OIHW", "NHWC"))
+
+            sm = _shard_map(local, mesh=mesh, in_specs=(_P(), _P(axis)),
+                            out_specs=_P(None, None, None, axis))
+
+            def fwd(x, w_sharded):
+                return _finish(layer, sm(x, w_sharded)[..., :m] * scale)
+        else:
+
+            def local(x, tiles):
+                w = tiles.reshape(tiles.shape[0] * tiles.shape[1], -1)
+                return x @ w.T
+
+            sm = _shard_map(local, mesh=mesh, in_specs=(_P(), _P(axis)),
+                            out_specs=_P(None, axis))
+
+            def fwd(x, w_sharded):
+                return _finish(layer, sm(x, w_sharded)[:, :m] * scale)
+
+        state = (mesh, w_sh, jax.jit(fwd))
+        layer._shard_state = state
+        return state
+
+    # -- execution ----------------------------------------------------------
+    def conv(self, layer, x):
+        _, w_sh, fwd = self._prepare(layer)
+        return fwd(jnp.asarray(x, jnp.float32), w_sh)
+
+    linear = conv
+
+    def run_model(self, model, batch):
+        # whole-model jitted chain (compile-once, like TiledBackend) —
+        # per-layer shard_maps inline into one computation, the sharded
+        # tile buffers staying device-resident across requests
+        state = getattr(model, "_run_sharded", None)
+        if state is None or state[0] != self.mesh:
+            for layer in model.layers:
+                self._prepare(layer)
+            fn = jax.jit(lambda x: model._chain(x, self.step))
+            model._run_sharded = state = (self.mesh, fn)
+        return state[1](jnp.asarray(batch, jnp.float32))
+
+
 register(TiledBackend())
 register(SmmBackend())
 register(SmmKernelBackend())
 register(CodrMatmulBackend())
+register(ShardedBackend())

@@ -6,7 +6,7 @@ Three representations of the same weights, used at different levels:
    format.  Used for DRAM/storage accounting and the offline encoder; a
    variable-width bitstream is not expressible as a static-shape XLA
    buffer, so it does not appear in compiled graphs (documented in
-   DESIGN.md §2).
+   docs/DESIGN.md §2).
 2. **Fixed-width unique-index pack** — the TPU-native adaptation: weights
    stored as ``b``-bit indices into a per-tensor sorted unique table,
    packed into uint32 words.  ``b = ceil(log2(U))`` is searched like the

@@ -182,6 +182,7 @@ class CodrConv2D:
         self._forward = None                   # jitted dispatch cache
         self._trace_count = 0                  # times the forward re-traced
         self._smm_ops = None                   # packed SMM kernel operands
+        self._shard_state = None               # sharded-backend tile cache
 
     # -- offline decode -----------------------------------------------------
     @property
@@ -335,6 +336,7 @@ class CodrLinear:
         self._tiles_dev: jax.Array | None = None
         self._forward = None
         self._trace_count = 0
+        self._shard_state = None               # sharded-backend tile cache
 
     @property
     def tiles(self) -> np.ndarray:
@@ -426,6 +428,7 @@ class CodrModel:
     def __init__(self, layers: Sequence[CodrConv2D | CodrLinear]):
         self.layers = list(layers)
         self._run_tiled = None            # jitted whole-model chain cache
+        self._run_sharded = None          # (mesh, jitted chain) — sharded
 
     def _chain(self, x: jax.Array, step) -> jax.Array:
         for layer in self.layers:

@@ -12,11 +12,14 @@ budget U (the paper's Fig. 6 U-sweep knob) → UCR (sort/densify/unify/Δ)
 
 The decode-fused execution lives in ``repro.kernels.codr_matmul`` (run
 on TPU; interpret-mode on CPU) — the XLA serving graphs model compressed
-weights as int8 + scale (DESIGN.md §2 explains the split).
+weights as int8 + scale (docs/DESIGN.md §2 explains the split).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
+from concurrent import futures
 
 import jax
 import jax.numpy as jnp
@@ -155,18 +158,47 @@ class CodrBatchServer:
     log2(max_batch)+1`` forward variants instead of one per distinct
     ragged size — the compile cache stops thrashing while padding waste
     stays bounded at <2x.
+
+    Two request paths share that dispatch core (``docs/DESIGN.md`` §3):
+
+    * **Synchronous** — :meth:`submit` + :meth:`flush` (or
+      :meth:`serve`): the caller owns batching cadence; a dispatch
+      failure raises out of ``flush``.
+    * **Asynchronous** — :meth:`submit_async` returns a
+      :class:`concurrent.futures.Future` immediately; a background flush
+      loop dispatches when either ``max_batch`` requests are pending
+      (load trigger) or the oldest pending request has waited
+      ``flush_deadline_s`` (latency trigger).  Consecutive batches are
+      **double-buffered**: batch *i+1*'s host→device transfer is issued
+      while batch *i* computes, so the device never idles on the PCIe
+      copy.  A dispatch failure propagates into exactly the futures of
+      the failed batch; other batches are unaffected.
+
+    The loop starts lazily on first ``submit_async`` (or explicitly via
+    :meth:`start_async`) and is joined by :meth:`stop_async` /
+    ``with server: ...``.
     """
 
-    def __init__(self, model, *, max_batch: int = 8):
+    def __init__(self, model, *, max_batch: int = 8,
+                 flush_deadline_s: float = 0.01):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if flush_deadline_s <= 0:
+            raise ValueError("flush_deadline_s must be > 0")
         self.model = model
         self.max_batch = max_batch
+        self.flush_deadline_s = flush_deadline_s
         self._queue: list[np.ndarray] = []
         self._next_id = 0                   # monotonic request-id counter
         self.batches_run = 0
         self.requests_served = 0
         self.bucket_counts: dict[int, int] = {}   # batch bucket → dispatches
+        # -- async state ------------------------------------------------
+        self._cv = threading.Condition()
+        self._async_queue: list[tuple[np.ndarray, futures.Future]] = []
+        self._oldest_t: float | None = None     # submit time of queue head
+        self._worker: threading.Thread | None = None
+        self._stopping = False
 
     def _bucket(self, n_real: int) -> int:
         b = 1
@@ -174,6 +206,34 @@ class CodrBatchServer:
             b *= 2
         return min(b, self.max_batch)
 
+    def _chunks(self, samples: list[np.ndarray]):
+        """Shared batching core: group positions by sample shape, split
+        into ≤ ``max_batch`` chunks, pad each to its power-of-two bucket.
+        Yields ``(positions, batch, n_real, bucket)`` with ``batch`` a
+        stacked host array of ``bucket`` rows."""
+        by_shape: dict[tuple, list[int]] = {}
+        for pos, x in enumerate(samples):
+            by_shape.setdefault(x.shape, []).append(pos)
+        for positions in by_shape.values():
+            for i in range(0, len(positions), self.max_batch):
+                chunk_pos = positions[i : i + self.max_batch]
+                chunk = [samples[p] for p in chunk_pos]
+                n_real = len(chunk)
+                bucket = self._bucket(n_real)
+                if n_real < bucket:          # pad → bucketed batch shape
+                    chunk = chunk + [chunk[-1]] * (bucket - n_real)
+                yield chunk_pos, np.stack(chunk), n_real, bucket
+
+    def _count(self, n_real: int, bucket: int) -> None:
+        # locked: the sync flush (caller thread) and the async flush
+        # loop (worker thread) both account onto these counters
+        with self._cv:
+            self.batches_run += 1
+            self.requests_served += n_real
+            self.bucket_counts[bucket] = \
+                self.bucket_counts.get(bucket, 0) + 1
+
+    # -- synchronous path ---------------------------------------------------
     def submit(self, x: np.ndarray) -> int:
         """Queue one sample (no batch dim).  Returns its request id.
 
@@ -191,25 +251,12 @@ class CodrBatchServer:
     def flush(self) -> list[np.ndarray]:
         """Run all queued requests; returns outputs in submission order."""
         outs: list[np.ndarray | None] = [None] * len(self._queue)
-        by_shape: dict[tuple, list[int]] = {}
-        for pos, x in enumerate(self._queue):
-            by_shape.setdefault(x.shape, []).append(pos)
         queue, self._queue = self._queue, []
-        for positions in by_shape.values():
-            for i in range(0, len(positions), self.max_batch):
-                chunk_pos = positions[i : i + self.max_batch]
-                chunk = [queue[p] for p in chunk_pos]
-                n_real = len(chunk)
-                bucket = self._bucket(n_real)
-                if n_real < bucket:          # pad → bucketed batch shape
-                    chunk = chunk + [chunk[-1]] * (bucket - n_real)
-                y = np.asarray(self.model.run(jnp.asarray(np.stack(chunk))))
-                for p, row in zip(chunk_pos, y[:n_real]):
-                    outs[p] = row
-                self.batches_run += 1
-                self.requests_served += n_real
-                self.bucket_counts[bucket] = \
-                    self.bucket_counts.get(bucket, 0) + 1
+        for chunk_pos, batch, n_real, bucket in self._chunks(queue):
+            y = np.asarray(self.model.run(jnp.asarray(batch)))
+            for p, row in zip(chunk_pos, y[:n_real]):
+                outs[p] = row
+            self._count(n_real, bucket)
         return outs
 
     def serve(self, samples) -> list[np.ndarray]:
@@ -217,6 +264,169 @@ class CodrBatchServer:
         for s in samples:
             self.submit(s)
         return self.flush()
+
+    # -- asynchronous path --------------------------------------------------
+    @property
+    def async_pending(self) -> int:
+        """Requests submitted via :meth:`submit_async` not yet dispatched."""
+        with self._cv:
+            return len(self._async_queue)
+
+    def submit_async(self, x: np.ndarray) -> futures.Future:
+        """Queue one sample (no batch dim) on the background flush loop.
+
+        Returns immediately with a :class:`concurrent.futures.Future`
+        that resolves to this sample's output row (host ``np.ndarray``)
+        once its batch is dispatched — by the ``max_batch`` load trigger
+        or the ``flush_deadline_s`` latency trigger, whichever fires
+        first.  If the batch dispatch raises, the exception lands on the
+        future (``.result()`` re-raises it).  Starts the flush loop if it
+        is not running.  Raises ``RuntimeError`` after :meth:`stop_async`
+        began (a future that could never resolve must not be issued).
+        """
+        fut: futures.Future = futures.Future()
+        sample = np.asarray(x, dtype=np.float32)
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError("server is stopping; submit_async "
+                                   "rejected (future would never resolve)")
+            if self._worker is None or not self._worker.is_alive():
+                self._start_locked()
+            self._async_queue.append((sample, fut))
+            if self._oldest_t is None:
+                self._oldest_t = time.monotonic()
+            self._cv.notify_all()
+        return fut
+
+    def start_async(self) -> "CodrBatchServer":
+        """Start the background flush loop explicitly (idempotent)."""
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError("server is stopping")
+            if self._worker is None or not self._worker.is_alive():
+                self._start_locked()
+        return self
+
+    def _start_locked(self) -> None:
+        self._worker = threading.Thread(target=self._flush_loop,
+                                        name="codr-batch-server",
+                                        daemon=True)
+        self._worker.start()
+
+    def stop_async(self, *, drain: bool = True) -> None:
+        """Stop the flush loop.  ``drain=True`` (default) dispatches the
+        remaining queue first; ``drain=False`` cancels pending futures.
+        Idempotent; the server can be restarted with :meth:`start_async`
+        afterwards.  Must not be called from the flush loop itself (e.g.
+        inside a ``Future`` done-callback, which runs on the worker
+        thread) — that raises ``RuntimeError`` without corrupting state.
+        """
+        if self._worker is threading.current_thread():
+            raise RuntimeError(
+                "stop_async called from the flush loop itself (done "
+                "callbacks run on the worker thread) — stop the server "
+                "from another thread")
+        with self._cv:
+            worker = self._worker
+            self._stopping = True
+            if not drain:
+                for _, fut in self._async_queue:
+                    fut.cancel()
+                self._async_queue.clear()
+                self._oldest_t = None
+            self._cv.notify_all()
+        try:
+            if worker is not None:
+                worker.join()
+        finally:
+            with self._cv:
+                self._worker = None
+                self._stopping = False
+
+    def __enter__(self) -> "CodrBatchServer":
+        return self.start_async()
+
+    def __exit__(self, *exc) -> None:
+        self.stop_async(drain=True)
+
+    def _flush_loop(self) -> None:
+        """Background worker: wait for a trigger, take the whole queue,
+        dispatch it bucketed with double-buffered staging."""
+        while True:
+            with self._cv:
+                while not self._stopping:
+                    if len(self._async_queue) >= self.max_batch:
+                        break                      # load trigger
+                    if self._oldest_t is not None:
+                        wait = (self._oldest_t + self.flush_deadline_s
+                                - time.monotonic())
+                        if wait <= 0:
+                            break                  # latency trigger
+                        self._cv.wait(wait)
+                    else:
+                        self._cv.wait()
+                taken = self._async_queue
+                self._async_queue = []
+                self._oldest_t = None
+                stopping = self._stopping
+            if taken:
+                self._dispatch_async(taken)
+            if stopping:
+                return
+
+    def _dispatch_async(self, taken) -> None:
+        """Run one drained queue: stage batch i+1's host→device transfer
+        while batch i computes (double buffering), resolve each batch's
+        futures as its results arrive, and propagate a failed dispatch
+        into exactly that batch's futures."""
+        # drop requests cancelled while queued BEFORE batching — they
+        # must neither burn compute nor inflate requests_served (this
+        # also moves every surviving future to RUNNING, so a cancel
+        # arriving after this point is a no-op)
+        live = [(s, f) for s, f in taken
+                if f.set_running_or_notify_cancel()]
+        if not live:
+            return
+        samples = [s for s, _ in live]
+        futs = [f for _, f in live]
+        chunks = list(self._chunks(samples))
+        staged: list = [None] * len(chunks)
+        if chunks:                      # stage the first transfer
+            staged[0] = _try_device_put(chunks[0][1])
+        for i, (chunk_pos, batch, n_real, bucket) in enumerate(chunks):
+            try:
+                y_dev = self.model.run(jnp.asarray(staged[i]))
+            except Exception as e:      # noqa: BLE001 — lands on futures
+                y_dev, err = None, e
+            else:
+                err = None
+            if i + 1 < len(chunks):     # overlaps with batch i's compute
+                staged[i + 1] = _try_device_put(chunks[i + 1][1])
+            if err is None:
+                try:
+                    y = np.asarray(y_dev)   # block on batch i only
+                except Exception as e:  # noqa: BLE001
+                    err = e
+            staged[i] = None            # release batch i's device buffer
+            if err is None:
+                # account BEFORE resolving: a caller waking up on
+                # Future.result() must already see this batch counted
+                self._count(n_real, bucket)
+            for j, p in enumerate(chunk_pos):
+                if err is not None:
+                    futs[p].set_exception(err)
+                else:
+                    futs[p].set_result(y[j])
+
+
+def _try_device_put(batch: np.ndarray):
+    """Start the async host→device transfer for a staged batch.  On a
+    backend without ``device_put`` semantics this degrades to the host
+    array (the dispatch then transfers synchronously, still correct)."""
+    try:
+        return jax.device_put(jnp.asarray(batch))
+    except Exception:                   # pragma: no cover — defensive
+        return batch
 
 
 def codr_serving_stats(cfg, *, n_unique: int = 16, seed: int = 0) -> dict:

@@ -2,7 +2,7 @@
 
 ``y = x @ decode(packed, table) * scale``
 
-TPU adaptation of the CoDR PU (DESIGN.md §2): the compressed weight
+TPU adaptation of the CoDR PU (docs/DESIGN.md §2): the compressed weight
 stream lives in HBM at ``bits/8`` bytes per weight; each grid step DMAs
 one packed block into VMEM, decodes it with vector shifts + a masked
 table reduction (the "Weight Decoder"), and feeds the dense tile to the

@@ -1,7 +1,8 @@
 """Pallas TPU kernel: fused flash attention.
 
-This is the production fix for the dominant memory term found in
-EXPERIMENTS.md §Roofline: the XLA-compiled attention materializes every
+This is the production fix for the dominant memory term the roofline
+report surfaces (``benchmarks/roofline.py``; methodology in
+``docs/DESIGN.md`` §6): the XLA-compiled attention materializes every
 (q_block × kv_block) score tile in HBM (B·H·S² traffic); the fused
 kernel keeps score tiles, the online-softmax stats, and the output
 accumulator **in VMEM** — HBM traffic collapses to q/k/v reads + o

@@ -3,7 +3,7 @@
 This is the *faithful-mechanism* kernel — the MPE/APE datapath of paper
 Fig. 5c expressed as a TPU kernel (run in interpret mode on CPU; the MXU
 kernel in :mod:`repro.kernels.codr_matmul` is the performance path, see
-DESIGN.md §2):
+docs/DESIGN.md §2):
 
 * **Phase A — MPE / differential MLP array**: a ``fori_loop`` over the
   unique weights performs ``P[u] = P[u-1] + Δ[u] * X`` — the Matrix-Matrix

@@ -238,7 +238,7 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh):
 def serve_param_fsdp(cfg: ModelConfig, mesh: Mesh,
                      bytes_per_param: float = 2.0) -> bool:
     """2-D-shard serving weights when a model-axis-only shard would not
-    fit HBM comfortably (see DESIGN.md §5).  Replicating over ``data``
+    fit HBM comfortably (see docs/DESIGN.md §5).  Replicating over ``data``
     (when it fits) removes the per-decode-step weight all-gathers —
     weight compression (int8/int4 = the CoDR serving formats) widens the
     set of models that qualify: the paper's trade, at cluster scale."""

@@ -1,5 +1,8 @@
-from repro.sharding.rules import (ShardCtx, current_ctx, maybe_constrain,
-                                  param_spec, set_ctx, use_ctx)
+from repro.sharding.rules import (ENGINE_TILE_AXIS, ShardCtx, current_ctx,
+                                  maybe_constrain, pad_to_multiple,
+                                  param_spec, set_ctx, shard_leading,
+                                  tile_mesh, use_ctx)
 
-__all__ = ["ShardCtx", "current_ctx", "maybe_constrain", "param_spec",
-           "set_ctx", "use_ctx"]
+__all__ = ["ENGINE_TILE_AXIS", "ShardCtx", "current_ctx", "maybe_constrain",
+           "pad_to_multiple", "param_spec", "set_ctx", "shard_leading",
+           "tile_mesh", "use_ctx"]

@@ -1,6 +1,6 @@
 """Sharding rules: one place that knows the mesh axes.
 
-Axes:
+Axes (transformer serving stack, ``docs/DESIGN.md`` §5):
   * ``pod``   — outer pure-DP axis (multi-pod); gradients cross DCI once.
   * ``data``  — FSDP axis: batch + parameter/optimizer-state sharding.
   * ``model`` — TP axis: attention heads / FFN hidden / MoE experts / vocab.
@@ -8,6 +8,14 @@ Axes:
 Models are mesh-agnostic: layers call :func:`maybe_constrain` with logical
 specs; outside a mesh context it is the identity, so the same code runs in
 single-device smoke tests and under the 512-chip production mesh.
+
+The CoDR engine adds one more axis: ``tile`` — the output-tile axis the
+``sharded`` backend (:mod:`repro.core.backends`) partitions each layer's
+decoded tile stack over.  :func:`tile_mesh` builds the 1-D mesh and
+:func:`shard_leading` pads + ``device_put``\\ s a host array across it;
+both degrade gracefully to a single device, so the same backend code
+runs in 1-device CI and on a forced-multi-device host platform
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``) alike.
 """
 from __future__ import annotations
 
@@ -16,9 +24,44 @@ import dataclasses
 import threading
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _STATE = threading.local()
+
+# the CoDR engine's output-tile model-parallel axis (sharded backend)
+ENGINE_TILE_AXIS = "tile"
+
+
+def tile_mesh(devices=None, *, axis: str = ENGINE_TILE_AXIS) -> Mesh:
+    """1-D mesh over ``devices`` (default: all local devices) named with
+    the engine's output-tile axis.  With one device this is a valid
+    1-element mesh — ``shard_map`` over it is the single-device fallback,
+    no special-casing in the caller."""
+    devs = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devs), (axis,))
+
+
+def pad_to_multiple(n: int, k: int) -> int:
+    """Smallest multiple of ``k`` that is >= ``n`` (>= k for n == 0)."""
+    return max(-(-n // k), 1) * k
+
+
+def shard_leading(x, mesh: Mesh, *, axis: str = ENGINE_TILE_AXIS):
+    """``device_put`` a host array sharded over its leading dimension.
+
+    The leading dim is zero-padded up to a multiple of the mesh axis size
+    first (a ragged tile stack still shards; the pad rows compute zeros
+    the caller crops away), so any ``n >= 1`` works on any device count.
+    Returns the committed, sharded ``jax.Array``.
+    """
+    x = np.asarray(x)
+    d = mesh.shape[axis]
+    pad = pad_to_multiple(x.shape[0], d) - x.shape[0]
+    if pad:
+        x = np.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    spec = P(axis, *([None] * (x.ndim - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
 
 
 @dataclasses.dataclass
@@ -88,7 +131,7 @@ def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
                *, fsdp: bool = True, moe2d: bool = False) -> P:
     """PartitionSpec for a parameter by its pytree path.
 
-    Conventions (DESIGN.md §5): 2-D weights ``(d_in, d_out)`` are
+    Conventions (docs/DESIGN.md §5): 2-D weights ``(d_in, d_out)`` are
     column-parallel (out over ``model``) when they *enter* a parallel
     region (qkv/up/gate), row-parallel (in over ``model``) when they
     *leave* one (o_proj/down).  FSDP shards the complementary dimension

@@ -1,0 +1,31 @@
+"""Docs stay wired to the code: every doc cross-reference in the tree
+resolves (tools/check_docs.py — the CI link-check step runs the same
+script), and the two architecture documents exist with the sections the
+module docstrings cite."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_doc_cross_references_resolve():
+    res = subprocess.run([sys.executable, str(ROOT / "tools" /
+                                              "check_docs.py")],
+                         capture_output=True, text=True, timeout=120)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_design_doc_has_cited_sections():
+    text = (ROOT / "docs" / "DESIGN.md").read_text()
+    # the sections module docstrings point into (serving §2/§3, configs
+    # §4, sharding/checkpoint §5, benchmarks §6)
+    for sec in ("## §1", "## §2", "## §3", "## §4", "## §5", "## §6"):
+        assert sec in text, f"docs/DESIGN.md lost section {sec!r}"
+
+
+def test_paper_map_exists_and_linked_from_readme():
+    assert (ROOT / "docs" / "PAPER_MAP.md").exists()
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/PAPER_MAP.md" in readme
+    assert "docs/DESIGN.md" in readme

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Doc cross-reference link check.
+
+Scans every tracked ``.py`` and ``.md`` file for references to markdown
+documents — both markdown links ``[text](DESIGN.md)`` and inline mentions
+like ``docs/DESIGN.md §2`` in docstrings/comments — and fails (exit 1)
+listing every reference that does not resolve.  A reference resolves if
+the target exists relative to the referencing file's directory, the repo
+root, or ``docs/``.  Section references into ``docs/DESIGN.md``
+(``DESIGN.md §N``) are additionally checked against the ``## §N``
+headings that actually exist.
+
+This is the guard against the failure mode this repo actually had:
+module docstrings citing a ``DESIGN.md §2`` that was never written.
+
+  python tools/check_docs.py          # from the repo root
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ["src", "tests", "benchmarks", "examples", "tools", "docs"]
+ROOT_DOCS = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md"]
+# SNIPPETS.md quotes external repos verbatim, ISSUE.md is the transient
+# PR brief, CHANGES.md is a changelog (entries describe files as they
+# existed at that point in history, including ones since removed)
+SKIP = {"SNIPPETS.md", "ISSUE.md", "CHANGES.md"}
+
+MD_TOKEN = re.compile(r"[A-Za-z0-9_./-]*[A-Za-z0-9_]\.md\b")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+\.md)(#[^)]*)?\)")
+SECTION_REF = re.compile(r"DESIGN\.md\s*§(\d+)")
+
+
+def files_to_scan():
+    for d in SCAN_DIRS:
+        base = ROOT / d
+        if base.is_dir():
+            for ext in ("*.py", "*.md"):
+                yield from sorted(base.rglob(ext))
+    for name in ROOT_DOCS:
+        p = ROOT / name
+        if p.exists():
+            yield p
+
+
+def resolves(ref: str, src: pathlib.Path) -> bool:
+    ref = ref.split("#")[0]
+    for base in (src.parent, ROOT, ROOT / "docs"):
+        try:
+            if (base / ref).exists():
+                return True
+        except OSError:                 # pragma: no cover — weird token
+            pass
+    return False
+
+
+def design_sections() -> set[str]:
+    design = ROOT / "docs" / "DESIGN.md"
+    if not design.exists():
+        return set()
+    return set(re.findall(r"^##+\s*§(\d+)", design.read_text(),
+                          flags=re.M))
+
+
+def main() -> int:
+    errors = []
+    sections = design_sections()
+    for path in files_to_scan():
+        if path.name in SKIP:
+            continue
+        text = path.read_text(errors="replace")
+        rel = path.relative_to(ROOT)
+        refs = set(MD_TOKEN.findall(text)) | \
+            {m.group(1) for m in MD_LINK.finditer(text)}
+        for ref in sorted(refs):
+            if not resolves(ref, path):
+                errors.append(f"{rel}: dangling doc reference {ref!r}")
+        for m in SECTION_REF.finditer(text):
+            if m.group(1) not in sections:
+                errors.append(f"{rel}: DESIGN.md §{m.group(1)} — no such "
+                              f"section (have: §{', §'.join(sorted(sections))})")
+    if errors:
+        print(f"{len(errors)} dangling doc reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("doc cross-references OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
