@@ -13,7 +13,11 @@ tile-parallel executor (over however many local devices the host
 exposes — force more with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``), the
 synchronous bucketed batch server, and the async futures path
-(``submit_async`` + background flush loop).  CSV lines (the harness
+(``submit_async`` + background flush loop) — plus the **transformer
+serving mode**: an ``repro.models`` LM prefill/decode with every
+projection executing from the packed bitstream through the decode-fused
+``codr_matmul`` backend (``repro.launch.serve.run_serve``), with weight
+HBM bytes measured on the stored pack.  CSV lines (the harness
 format): ``name,us_per_call,derived``; the JSON summary (default
 ``BENCH_engine.json``) is stamped with the git SHA and the
 encode-config metadata so the perf trajectory stays comparable PR over
@@ -128,6 +132,20 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
                    f"batches={aserver.batches_run - abatches_before};"
                    f"deadline_s={aserver.flush_deadline_s}"))
 
+    # transformer serving from the packed representation: prefill +
+    # greedy decode of an repro.models LM with every projection executing
+    # through the decode-fused codr_matmul backend (interpret mode on
+    # CPU), HBM bytes measured on the stored pack
+    from repro.launch.serve import run_serve
+    st = run_serve(arch="qwen2.5-3b", batch=2,
+                   prompt_len=4 if small else 8,
+                   gen_len=4 if small else 16,
+                   use_codr=True, verbose=False)
+    print(csv_line("engine_serve_transformer", st["ms_per_tok"] * 1e3,
+                   f"arch={st['arch']};backend={st['backend']};"
+                   f"hbm_bytes={st['hbm_bytes']};"
+                   f"bits_per_weight={st['bits_per_weight']:.2f}"))
+
     for name, acc in compiled.sram_report(hw):
         print(csv_line(f"engine_sram_{name}", 0.0,
                        f"total_sram={acc.total_sram:.0f};"
@@ -147,6 +165,15 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
         "n_devices": n_dev,
         "serve_us_per_request": t_srv.dt / len(outs) * 1e6,
         "serve_async_us_per_request": t_async.dt / len(outs_a) * 1e6,
+        "serve_transformer": {
+            "arch": st["arch"], "backend": st["backend"],
+            "ms_per_tok": st["ms_per_tok"],
+            "prefill_s": st["prefill_s"],
+            "hbm_bytes": st["hbm_bytes"],
+            "dense_bf16_bytes": st["dense_bf16_bytes"],
+            "bits_per_weight": st["bits_per_weight"],
+            "n_packed_tensors": st["n_packed"],
+        },
         "bits_per_weight": compiled.bits_per_weight(),
         "trace_count": compiled.trace_count,
     }

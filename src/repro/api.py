@@ -7,16 +7,29 @@
     y = compiled.run(x)                            # from the RLE bitstreams
     server = compiled.serve(max_batch=8)
 
+Transformer params pytrees (``repro.models``) compile *in place*: every
+projection leaf becomes a packed bitstream the model executes through
+the backend registry (``launch/serve.py --codr`` rides this)::
+
+    cp = codr.compile_params(params, codr.EncodeConfig(n_unique=16),
+                             backend="codr_matmul")
+    logits, cache = api.prefill(cp.params, batch, cfg)   # decode-fused
+
 Everything here re-exports from :mod:`repro.core.api` (the pipeline) and
 :mod:`repro.core.backends` (the pluggable execution backends).
 """
-from repro.core.api import (CompiledModel, EncodeConfig,  # noqa: F401
-                            LayerSpec, ModelSpec, compile)
+from repro.core.api import (CompiledModel, CompiledParams,  # noqa: F401
+                            EncodeConfig, LayerSpec, ModelSpec, compile,
+                            compile_params)
 from repro.core.backends import (Backend, BackendCaps,  # noqa: F401
                                  available_backends, get_backend, register)
+from repro.core.codr_linear import (PackedLinear, PackedWeight,  # noqa: F401
+                                    dense_weight, pack_projection)
 
 __all__ = [
     "LayerSpec", "ModelSpec", "EncodeConfig", "CompiledModel", "compile",
+    "CompiledParams", "compile_params", "PackedLinear", "PackedWeight",
+    "dense_weight", "pack_projection",
     "Backend", "BackendCaps", "available_backends", "get_backend",
     "register",
 ]

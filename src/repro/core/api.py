@@ -43,13 +43,17 @@ import re as _re
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backends as _backends
 from repro.core import engine as _engine
+from repro.core.codr_linear import PackedLinear as _PackedLinear
+from repro.core.codr_linear import pack_projection as _pack_projection
 
 __all__ = [
     "LayerSpec", "ModelSpec", "EncodeConfig", "CompiledModel", "compile",
+    "CompiledParams", "compile_params",
 ]
 
 
@@ -468,3 +472,194 @@ def compile(spec: ModelSpec, config: EncodeConfig | None = None, *,
                 decode_source=config.decode_source,
                 n_unique=config.n_unique, rle_params=config.rle_params))
     return CompiledModel(_engine.CodrModel(layers), spec, config, be)
+
+
+# ---------------------------------------------------------------------------
+# the transformer lane: compile a params pytree in place
+# ---------------------------------------------------------------------------
+
+#: path substrings identifying projection leaves in ``repro.models``
+#: params (q/k/v/o, MLA a/b, up/gate/down, SSM in/x/dt/out, router and
+#: expert stacks).  Embedding matrices deliberately do NOT match: they
+#: execute as gathers (`jnp.take`), not matmuls, so they stay dense —
+#: quantize-applied like every other large leaf, just not packed.
+PACK_INCLUDE = ("proj", "router", "w_experts")
+
+
+class _ConvLeafShim:
+    """Duck-typed layer handed to ``Backend.supports`` so a conv-shaped
+    leaf in ``compile_params`` fails with the same capability error
+    surface ``compile`` uses."""
+
+    kind = "conv"
+    stride = 1
+
+    def __init__(self, name: str):
+        self.name = name
+
+
+@dataclasses.dataclass
+class CompiledParams:
+    """What :func:`compile_params` returns: the params pytree with every
+    projection leaf replaced by its packed bitstream form
+    (:class:`repro.core.codr_linear.PackedLinear`), plus the accounting.
+
+    ``params`` drops into ``repro.models`` forwards unchanged —
+    ``models.common.linear`` intercepts the packed leaves and resolves
+    them through the backend registry, and ``prefill``/``decode_step``
+    stay jit-compatible (packed operands are pytree leaves with static
+    aux, so repeat decode steps never retrace).  HBM accounting here is
+    *measured* on the stored representation (``hbm_bytes``), not
+    estimated.
+    """
+
+    params: object
+    reports: list                 # serving.TensorReport per packed leaf
+    packed_paths: list
+    quantized_paths: list         # quantize-applied but served dense
+    config: EncodeConfig
+    backend: str
+
+    def packed_leaves(self):
+        """``(path_str, PackedLinear)`` pairs, flatten order."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.params, is_leaf=lambda l: isinstance(l, _PackedLinear))
+        return [("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in path), leaf)
+                for path, leaf in flat if isinstance(leaf, _PackedLinear)]
+
+    # -- measured accounting ------------------------------------------------
+    def hbm_bytes(self) -> int:
+        """Real bytes of the packed representation (indices + tables +
+        scales) — the number the serving path reports."""
+        return sum(pl.hbm_bytes for _, pl in self.packed_leaves())
+
+    def dense_bf16_bytes(self) -> int:
+        return sum(pl.n_weights * 2 for _, pl in self.packed_leaves())
+
+    def n_packed_weights(self) -> int:
+        return sum(pl.n_weights for _, pl in self.packed_leaves())
+
+    def bits_per_weight(self) -> float:
+        return self.hbm_bytes() * 8 / max(self.n_packed_weights(), 1)
+
+    def compression_vs_bf16(self) -> float:
+        return self.dense_bf16_bytes() / max(self.hbm_bytes(), 1)
+
+    def summary(self) -> str:
+        """Human-readable accounting: the RLE/baseline comparison (when
+        accounting ran) plus the measured packed-representation bytes."""
+        lines = []
+        if self.reports:
+            from repro.core.serving import codr_report
+            lines.append(codr_report(self.reports))
+        lines.append(
+            f"packed {len(self.packed_paths)} projection tensors "
+            f"({self.n_packed_weights() / 1e6:.2f}M weights) for backend "
+            f"{self.backend!r}: {self.hbm_bytes() / 1e6:.3f} MB HBM "
+            f"measured ({self.bits_per_weight():.2f} bits/weight, "
+            f"{self.compression_vs_bf16():.1f}x vs bf16); "
+            f"{len(self.quantized_paths)} more tensors quantize-applied, "
+            f"served dense")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"CompiledParams({len(self.packed_paths)} packed + "
+                f"{len(self.quantized_paths)} quantized leaves, "
+                f"{self.bits_per_weight():.2f} bits/weight, "
+                f"backend={self.backend!r})")
+
+
+def compile_params(params, config: EncodeConfig | None = None, *,
+                   backend: str | _backends.Backend = "codr_matmul",
+                   min_size: int | None = None,
+                   include: Sequence[str] = PACK_INCLUDE,
+                   exclude: Sequence[str] = (),
+                   sample_rows: int | None = 4096,
+                   accounting: bool = True) -> CompiledParams:
+    """Offline-encode a ``repro.models`` params pytree for serving from
+    the compressed representation — the transformer lane of
+    :func:`compile` (docs/DESIGN.md §2).
+
+    Every projection leaf (path matches ``include`` and not ``exclude``,
+    ``ndim >= 2``, ``size >= min_size``) is quantized under the
+    ``config`` U budget and converted to packed bitstream form
+    (:class:`~repro.core.codr_linear.PackedLinear`); every *other* large
+    leaf gets the quantization applied in place (embeddings and other
+    gather-consumed tensors serve dense), exactly as
+    ``serving.codr_compress_params`` would — so decode-fused and
+    quantize-applied serving see bit-identical weights.  Leading stack
+    dims (scanned layer stacks, expert stacks) pack per-matrix under one
+    shared quantization, so ``lax.scan`` slices packs like any other
+    stacked leaf.
+
+    The ``backend`` must declare ``caps.packed_matmul`` (``codr_matmul``
+    — the fused decode+matmul kernel — or ``tiled``/``sharded``, the
+    decode-then-matmul reference lane); a conv-shaped leaf that matches
+    ``include`` raises that backend's capability error at compile time.
+    ``min_size`` defaults to ``serving.MIN_COMPRESS_SIZE``;
+    ``sample_rows``/``accounting`` bound the per-tensor RLE accounting
+    (the *packed bytes* are always measured in full).
+    """
+    from repro.core import serving as _serving
+
+    config = EncodeConfig() if config is None else config
+    be = _backends.resolve(backend)
+    if not be.caps.packed_matmul:
+        raise ValueError(
+            f"backend {be.name!r} has no packed-projection matmul path "
+            f"(caps.packed_matmul is False); packed-capable backends: "
+            f"{', '.join(n for n in _backends.available_backends() if _backends.get_backend(n).caps.packed_matmul)}")
+    if min_size is None:
+        min_size = _serving.MIN_COMPRESS_SIZE
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    new_leaves, reports = [], []
+    packed_paths, quantized_paths = [], []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        arr = np.asarray(leaf)
+        wanted = (any(tok in pstr for tok in include)
+                  and not any(tok in pstr for tok in exclude))
+        if arr.ndim < 2 or arr.size < min_size:
+            new_leaves.append(leaf)
+            continue
+        if not wanted:
+            # quantize-applied, served dense (the codr_compress_params
+            # lane) — embeddings, recurrent state inits, conv stacks
+            mat = arr.reshape(-1, arr.shape[-1])
+            deq, _ = _serving._quantize_only(mat, config.n_unique)
+            new_leaves.append(jnp.asarray(deq.reshape(arr.shape),
+                                          dtype=leaf.dtype))
+            quantized_paths.append(pstr)
+            continue
+        if arr.ndim == 4 and max(arr.shape[-2:]) < 16:
+            # OIHW conv kernel — BOTH trailing dims are small spatial
+            # extents, unlike a stacked expert projection (L, E, d, f)
+            # whose trailing matrix dims are wide — surface the
+            # backend's capability error
+            ok, reason = be.supports(_ConvLeafShim(pstr))
+            raise ValueError(reason if not ok else
+                             f"compile_params packs linear projections "
+                             f"only; conv leaf {pstr!r} must go through "
+                             f"ModelSpec.from_params → compile")
+        pl = _pack_projection(arr, n_unique=config.n_unique,
+                              backend=be.name)
+        new_leaves.append(pl)
+        packed_paths.append(pstr)
+        if accounting:
+            acc = _serving.account_tensor(arr.reshape(-1, arr.shape[-1]),
+                                          n_unique=config.n_unique,
+                                          sample_rows=sample_rows)
+            acc["pack_bits"] = pl.hbm_bytes * 8  # measured, not estimated
+            reports.append(_serving.TensorReport(
+                path=pstr, n_weights=arr.size, **acc))
+    if not packed_paths:
+        raise ValueError(
+            "compile_params found no packable projection leaves "
+            f"(include={tuple(include)!r}, min_size={min_size}) — for "
+            "conv/dense checkpoint pytrees use ModelSpec.from_params")
+    return CompiledParams(jax.tree_util.tree_unflatten(treedef, new_leaves),
+                          reports, packed_paths, quantized_paths, config,
+                          be.name)

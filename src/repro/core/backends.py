@@ -99,12 +99,18 @@ class BackendCaps:
                              other kinds fall back per ``fallback_kinds``.
     ``fallback_kinds``       kinds delegated to the layer's own tiled
                              forward (empty = unsupported kinds error).
+    ``packed_matmul``        the backend can execute a packed projection
+                             leaf (:class:`repro.core.codr_linear.
+                             PackedLinear`) via :meth:`Backend.matmul` —
+                             the transformer serving lane
+                             (``repro.api.compile_params`` gates on it).
     """
 
     max_stride: int | None = None
     integer_activations: bool = False
     native_kinds: frozenset = frozenset({"conv", "linear"})
     fallback_kinds: frozenset = frozenset()
+    packed_matmul: bool = False
     description: str = ""
 
     def supports_stride(self, stride: int) -> bool:
@@ -228,6 +234,24 @@ class Backend(abc.ABC):
         bit-for-bit parity across backends depends on it."""
         return _finish(layer, y)
 
+    def matmul(self, x: jax.Array, w) -> jax.Array:
+        """Execute one packed projection leaf
+        (:class:`repro.core.codr_linear.PackedLinear`):
+        ``(..., K) @ dequantize(w) → (..., out_features)`` in ``x``'s
+        dtype.  This is the transformer serving entry point —
+        ``models.common.linear`` routes packed params leaves here.
+
+        The default is decode-then-matmul with *exactly* the dense
+        ``linear`` numerics (dequantized f32 weight cast to ``x.dtype``,
+        then ``jnp.dot``), so a backend relying on it — ``tiled``,
+        ``sharded`` — produces logits bit-for-bit equal to serving the
+        quantize-applied dense params.  Kernel backends override with a
+        fused datapath (``codr_matmul`` decodes in VMEM inside the MXU
+        tiles, f32 accumulation — near-exact, not bit-for-bit).  Only
+        meaningful when ``caps.packed_matmul`` is set; ``compile_params``
+        gates on that flag."""
+        return jnp.dot(x, w.dense().astype(x.dtype))
+
     def run_model(self, model, batch: jax.Array) -> jax.Array:
         """Forward a batch through a :class:`~repro.core.engine.CodrModel`
         (or any object exposing ``_chain``): casts to float32, chains
@@ -291,7 +315,8 @@ class TiledBackend(Backend):
     chain jitted once per input shape (compile-once contract)."""
 
     name = "tiled"
-    caps = BackendCaps(description="fused lax.conv/matmul tile dispatch, "
+    caps = BackendCaps(packed_matmul=True,
+                       description="fused lax.conv/matmul tile dispatch, "
                                    "any stride, float datapath")
 
     def conv(self, layer, x):
@@ -380,11 +405,29 @@ class CodrMatmulBackend(Backend):
             self._caps = BackendCaps(
                 native_kinds=frozenset(kc["kinds"]),
                 integer_activations=kc["integer_activations"],
+                packed_matmul=kc.get("packed_matmul", False),
                 description=kc["description"])
         return self._caps
 
     def conv(self, layer, x):                      # pragma: no cover
         raise NotImplementedError("codr_matmul is linear-only")
+
+    def matmul(self, x, w):
+        """Fused decode+matmul from the packed bitstream: the table
+        gather happens in VMEM inside the MXU tiles (interpret mode on
+        CPU).  f32 accumulation — matches the dense reference to float
+        tolerance, tighter than the bf16 dot it replaces."""
+        from repro.kernels.codr_matmul import codr_matmul
+        if w.weight.packed.ndim != 2:
+            raise ValueError(
+                "codr_matmul executes per-matrix packed operands; got a "
+                f"stacked pack of shape {w.weight.packed.shape} — slice "
+                "the stack axis (lax.scan does) or decode via "
+                "dense_weight() first")
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        y = codr_matmul(x2, w.weight)[:, : w.out_features]
+        return y.reshape(*lead, w.out_features).astype(x.dtype)
 
     def linear(self, layer, x):
         from repro.core.codr_linear import pack_unique
@@ -444,7 +487,8 @@ class ShardedBackend(Backend):
     """
 
     name = "sharded"
-    caps = BackendCaps(description="shard_map tile-parallel dispatch over "
+    caps = BackendCaps(packed_matmul=True,
+                       description="shard_map tile-parallel dispatch over "
                                    "the output-tile axis, any stride, "
                                    "float datapath, 1-device fallback")
 

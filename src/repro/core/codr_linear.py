@@ -30,31 +30,51 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PackedWeight", "pack_unique", "unpack_unique",
-           "codr_matmul_ref", "choose_bits"]
+__all__ = ["PackedWeight", "PackedLinear", "pack_unique", "pack_projection",
+           "unpack_unique", "dense_weight", "codr_matmul_ref", "choose_bits"]
 
 
 @dataclasses.dataclass
 class PackedWeight:
-    """Fixed-width unique-index packed weight for a (K, N) matrix."""
+    """Fixed-width unique-index packed weight for a (K, N) matrix.
 
-    packed: jax.Array      # (K, N * bits // 32) uint32
-    table: jax.Array       # (2**bits,) float32/bf16 unique values (padded)
-    scale: jax.Array       # per-tensor or per-column scale
+    Registered as a JAX pytree so packed operands ride inside compiled
+    graphs as ordinary leaves: ``packed``/``table``/``scale`` are the
+    children (arrays), ``bits``/``shape`` the static aux data — so a
+    ``jax.jit`` over a params pytree containing packed weights caches on
+    the pack geometry and never retraces across decode steps.  The
+    arrays may carry extra *leading* stack dimensions (scan-stacked
+    transformer layers, expert stacks); ``shape`` is always the
+    per-matrix ``(K, N_padded)`` geometry, so ``lax.scan`` slicing a
+    stacked pack yields a valid per-matrix pack with unchanged aux.
+    """
+
+    packed: jax.Array      # (..., K, N * bits // 32) uint32
+    table: jax.Array       # (..., 2**bits) unique values (zero-padded)
+    scale: jax.Array       # per-tensor (leading-dims broadcast) scale
     bits: int
     shape: tuple[int, int]
 
     @property
     def hbm_bytes(self) -> int:
-        return self.packed.size * 4 + self.table.size * 2 + self.scale.size * 4
+        return (self.packed.size * 4
+                + self.table.size * self.table.dtype.itemsize
+                + self.scale.size * 4)
 
     @property
     def dense_bf16_bytes(self) -> int:
-        return int(np.prod(self.shape)) * 2
+        lead = int(np.prod(self.packed.shape[:-2], dtype=np.int64))
+        return lead * int(np.prod(self.shape)) * 2
 
     @property
     def compression_vs_bf16(self) -> float:
         return self.dense_bf16_bytes / self.hbm_bytes
+
+
+jax.tree_util.register_pytree_node(
+    PackedWeight,
+    lambda w: ((w.packed, w.table, w.scale), (w.bits, w.shape)),
+    lambda aux, ch: PackedWeight(ch[0], ch[1], ch[2], aux[0], aux[1]))
 
 
 def choose_bits(n_unique: int) -> int:
@@ -107,3 +127,138 @@ def codr_matmul_ref(x: jax.Array, w: PackedWeight) -> jax.Array:
     dense = unpack_unique(w.packed, w.table, bits=w.bits, n=w.shape[1])
     y = jnp.dot(x.astype(jnp.float32), dense.astype(jnp.float32))
     return (y * w.scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# packed projection leaves — the transformer serving representation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedLinear:
+    """A projection weight in packed bitstream form, as a params leaf.
+
+    This is the pytree-leaf shape a ``repro.models`` params tree takes
+    after ``repro.api.compile_params``: the :class:`PackedWeight`
+    bitstream (possibly with leading stack dims — scanned layer stacks,
+    expert stacks) plus the logical output-feature count (the pack pads
+    the output dim to a whole uint32 word) and the name of the registered
+    backend whose ``matmul`` executes it.  ``models.common.linear``
+    intercepts these leaves and resolves the matmul through
+    ``repro.core.backends`` instead of dense ``jnp.dot``
+    (docs/DESIGN.md §2).
+
+    Static aux data is ``(out_features, backend)`` — both hashable, so
+    jitted ``prefill``/``decode_step`` graphs cache across calls and
+    ``lax.scan`` can carry stacked packs in its xs.
+    """
+
+    weight: PackedWeight
+    out_features: int
+    backend: str = "codr_matmul"
+
+    @property
+    def in_features(self) -> int:
+        return self.weight.shape[0]
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.weight.hbm_bytes
+
+    @property
+    def n_weights(self) -> int:
+        lead = int(np.prod(self.weight.packed.shape[:-2], dtype=np.int64))
+        return lead * self.weight.shape[0] * self.out_features
+
+    def dense(self) -> jax.Array:
+        """Decode to the dequantized dense weight, float32.
+
+        Bit-for-bit equal to ``ucr.dequantize_int8(restrict_unique(q, U),
+        scale)`` on the original float leaf — the quantize-*applied*
+        reference lane (``serving.codr_compress_params``) computes exactly
+        that, which is what makes decode-fused vs quantize-applied logits
+        comparable at the bit level.  Traceable: safe inside jit/scan
+        (decode-on-dispatch).
+        """
+        pw = self.weight
+        k, n_pad = pw.shape
+        lead = pw.packed.shape[:-2]
+        if lead:
+            flat_p = pw.packed.reshape((-1,) + pw.packed.shape[-2:])
+            flat_t = pw.table.reshape((-1,) + pw.table.shape[-1:])
+            dec = jax.vmap(
+                lambda p, t: unpack_unique(p, t, bits=pw.bits, n=n_pad)
+            )(flat_p, flat_t)
+            dec = dec.reshape(tuple(lead) + (k, n_pad))
+            scale = pw.scale.reshape(tuple(lead) + (1, 1))
+        else:
+            dec = unpack_unique(pw.packed, pw.table, bits=pw.bits, n=n_pad)
+            scale = pw.scale
+        return dec[..., : self.out_features] * scale
+
+
+jax.tree_util.register_pytree_node(
+    PackedLinear,
+    lambda w: ((w.weight,), (w.out_features, w.backend)),
+    lambda aux, ch: PackedLinear(ch[0], aux[0], aux[1]))
+
+
+def dense_weight(w, dtype=None):
+    """Decode a :class:`PackedLinear` to its dense dequantized form;
+    pass plain arrays through.  The escape hatch for weight uses no
+    backend matmul covers — absorbed-MLA reshapes, ``ragged_dot`` expert
+    stacks, recurrent einsums — keeping decode-on-dispatch semantics at
+    those sites."""
+    if isinstance(w, PackedLinear):
+        w = w.dense()
+    return w if dtype is None else w.astype(dtype)
+
+
+def pack_projection(w: np.ndarray, *, n_unique: int = 16,
+                    backend: str = "codr_matmul") -> PackedLinear:
+    """Offline-encode one float projection leaf into bitstream form.
+
+    ``w`` is ``(..., K, N)`` — any leading dims are treated as a stack of
+    independent ``(K, N)`` matrices (scan-stacked transformer layers,
+    expert stacks) sharing one quantization: like
+    ``serving.codr_compress_params``, the leaf is quantized as a single
+    tensor (``quantize_int8`` over ``w.reshape(-1, N)`` + the paper's U
+    restriction), so decode-fused execution and the quantize-applied
+    reference see bit-identical weights.  The shared unique table and
+    scale are broadcast over the leading dims so ``lax.scan`` can slice
+    the stack axis uniformly across all three arrays.
+    """
+    from repro.core import ucr
+
+    w = np.asarray(w, dtype=np.float32)
+    if w.ndim < 2:
+        raise ValueError(f"pack_projection needs a (..., K, N) matrix, "
+                         f"got shape {w.shape}")
+    *lead, k, n = w.shape
+    q, scale = ucr.quantize_int8(w.reshape(-1, n))
+    q = ucr.restrict_unique(q, n_unique).reshape(w.shape)
+    table = np.unique(q)
+    bits = choose_bits(max(len(table), 2))
+    per_word = 32 // bits
+    idx = np.searchsorted(table, q).astype(np.uint32)
+    pad = (-n) % per_word
+    if pad:                       # pad output features to a whole word;
+        idx = np.pad(idx, [(0, 0)] * (idx.ndim - 1) + [(0, pad)])
+        # padded columns decode to table[0] and are cropped post-matmul
+    idx = idx.reshape(*lead, k, (n + pad) // per_word, per_word)
+    shifts = np.arange(per_word, dtype=np.uint32) * bits
+    packed = (idx << shifts).astype(np.uint32).sum(axis=-1, dtype=np.uint32)
+    padded_table = np.zeros(1 << bits, dtype=np.float32)
+    padded_table[: len(table)] = table
+    lead = tuple(lead)
+    if lead:
+        padded_table = np.broadcast_to(padded_table,
+                                       lead + padded_table.shape).copy()
+        scale_arr = np.full(lead, scale, dtype=np.float32)
+    else:
+        scale_arr = np.asarray(scale, dtype=np.float32)
+    pw = PackedWeight(
+        packed=jnp.asarray(packed),
+        table=jnp.asarray(padded_table, dtype=jnp.float32),
+        scale=jnp.asarray(scale_arr),
+        bits=bits, shape=(k, n + pad))
+    return PackedLinear(pw, out_features=n, backend=backend)

@@ -35,6 +35,12 @@ MIN_COMPRESS_SIZE = 1024           # skip tiny leaves (norms, biases)
 
 @dataclasses.dataclass
 class TensorReport:
+    """Per-tensor compression accounting.  ``codr/ucnn/scnn_bits`` are
+    the variable-width storage formats; ``pack_bits`` is the size of the
+    **fixed-width unique-index pack** the decode-fused kernel executes
+    from — i.e. the weight HBM traffic of the serving path, which is why
+    it rides in the report instead of being recomputed downstream."""
+
     path: str
     n_weights: int
     codr_bits: int
@@ -42,10 +48,15 @@ class TensorReport:
     scnn_bits: int
     density: float
     n_unique_mean: float
+    pack_bits: int = 0
 
     @property
     def codr_bits_per_weight(self) -> float:
         return self.codr_bits / self.n_weights
+
+    @property
+    def pack_bits_per_weight(self) -> float:
+        return self.pack_bits / self.n_weights
 
 
 def compress_tensor(w: np.ndarray, *, n_unique: int = 256, t_m: int = 256
@@ -76,14 +87,46 @@ def compress_tensor(w: np.ndarray, *, n_unique: int = 256, t_m: int = 256
     return deq.astype(np.float32), report
 
 
+def account_tensor(mat: np.ndarray, *, n_unique: int,
+                   sample_rows: int | None) -> dict:
+    """Sampled RLE/baseline accounting for one ``(rows, d_out)`` matrix:
+    encode the leading ``sample_rows`` rows, scale the bit counts back up
+    by the sampled fraction.  Shared by ``codr_compress_params`` and
+    ``api.compile_params`` so the sampling policy lives in one place."""
+    rows = mat.shape[0]
+    if sample_rows and rows > sample_rows:
+        sub, scale_f = mat[:sample_rows], rows / sample_rows
+    else:
+        sub, scale_f = mat, 1.0
+    _, rep = compress_tensor(sub, n_unique=n_unique)
+    out = {k: int(rep[k] * scale_f)
+           for k in ("codr_bits", "ucnn_bits", "scnn_bits", "pack_bits")}
+    out["density"] = rep["density"]
+    out["n_unique_mean"] = rep["n_unique_mean"]
+    return out
+
+
 def codr_compress_params(params, *, n_unique: int = 16,
-                         sample_cols: int | None = 4096):
+                         sample_rows: int | None = 4096,
+                         sample_cols: int | None = None):
     """Compress every large 2-D+ leaf; returns (new_params, report).
 
-    ``sample_cols`` bounds the RLE accounting work per tensor (encode a
-    column sample, scale the bits) — the *quantization* is always applied
-    to the full tensor.
+    ``sample_rows`` bounds the RLE accounting work per tensor: each leaf
+    is reshaped to ``(rows, d_out)`` and only the leading ``sample_rows``
+    **rows** are RLE-encoded, with the bit counts scaled back up by the
+    sampled fraction (a regression test pins sampled-vs-full agreement).
+    The *quantization* is always applied to the full tensor.
+
+    ``sample_cols`` is the deprecated name of the same parameter — it
+    always sampled rows of the reshaped matrix, never columns.
     """
+    if sample_cols is not None:
+        import warnings
+        warnings.warn("codr_compress_params(sample_cols=...) is "
+                      "deprecated — it always sampled leading ROWS of "
+                      "the reshaped (rows, d_out) matrix; use "
+                      "sample_rows", DeprecationWarning, stacklevel=2)
+        sample_rows = sample_cols
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     new_leaves, reports = [], []
     for path, leaf in flat:
@@ -94,22 +137,12 @@ def codr_compress_params(params, *, n_unique: int = 16,
             new_leaves.append(leaf)
             continue
         mat = arr.reshape(-1, arr.shape[-1])
-        cols = mat.shape[0]
-        if sample_cols and cols > sample_cols:
-            sub = mat[:sample_cols]
-            scale_f = cols / sample_cols
-        else:
-            sub, scale_f = mat, 1.0
-        _, rep = compress_tensor(sub, n_unique=n_unique)
+        acc = account_tensor(mat, n_unique=n_unique,
+                             sample_rows=sample_rows)
         full_deq, _ = _quantize_only(mat, n_unique)
         new_leaves.append(jnp.asarray(full_deq.reshape(arr.shape),
                                       dtype=leaf.dtype))
-        reports.append(TensorReport(
-            path=pstr, n_weights=arr.size,
-            codr_bits=int(rep["codr_bits"] * scale_f),
-            ucnn_bits=int(rep["ucnn_bits"] * scale_f),
-            scnn_bits=int(rep["scnn_bits"] * scale_f),
-            density=rep["density"], n_unique_mean=rep["n_unique_mean"]))
+        reports.append(TensorReport(path=pstr, n_weights=arr.size, **acc))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), reports
 
 
@@ -124,6 +157,7 @@ def codr_report(reports: list[TensorReport]) -> str:
     tot_codr = sum(r.codr_bits for r in reports)
     tot_ucnn = sum(r.ucnn_bits for r in reports)
     tot_scnn = sum(r.scnn_bits for r in reports)
+    tot_pack = sum(r.pack_bits for r in reports)
     lines = [
         f"CoDR weight compression over {len(reports)} tensors "
         f"({tot_w/1e6:.1f}M weights):",
@@ -134,6 +168,11 @@ def codr_report(reports: list[TensorReport]) -> str:
         f"  SCNN : {tot_scnn/tot_w:.2f} bits/weight "
         f"(CoDR {tot_scnn/max(tot_codr,1):.2f}x better)",
     ]
+    if tot_pack:
+        lines.append(
+            f"  pack : {tot_pack/tot_w:.2f} bits/weight fixed-width "
+            f"unique-index pack (serving HBM traffic, "
+            f"{16*tot_w/max(tot_pack,1):.1f}x vs bf16)")
     return "\n".join(lines)
 
 

@@ -17,6 +17,7 @@ KERNEL_CAPS = {
     "kinds": ("linear",),
     "integer_activations": False,  # float activations, f32 accumulation
     "interpret_on_cpu": True,
+    "packed_matmul": True,         # executes PackedLinear params leaves
     "description": "Pallas fused decode+matmul (unique-index pack, "
                    "output-stationary MXU tiles)",
 }

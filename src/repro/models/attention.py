@@ -15,8 +15,8 @@ except ImportError:                    # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import (apply_rope, dense_init, linear, norm_apply,
-                                 norm_init, rms_norm)
+from repro.models.common import (apply_rope, dense_init, dense_weight,
+                                 linear, norm_apply, norm_init, rms_norm)
 from repro.sharding import current_ctx, maybe_constrain
 
 
@@ -374,7 +374,9 @@ def mla_decode(p, x, cfg, cache, pos):
     krot_cache = jax.lax.dynamic_update_slice(
         krot_cache, krot_new.astype(krot_cache.dtype), (0, pos, 0))
 
-    w_kv_b = p["kv_b_proj"].reshape(c, h, dn + dv)
+    # absorbed form consumes the raw weight, not a matmul — decode a
+    # packed leaf on dispatch (identity for dense params)
+    w_kv_b = dense_weight(p["kv_b_proj"]).reshape(c, h, dn + dv)
     w_uk, w_uv = w_kv_b[..., :dn], w_kv_b[..., dn:]
     q_lat = _einsum_f32("bqhd,chd->bqhc", qn, w_uk.astype(qn.dtype))
     scores = (_einsum_f32("bqhc,bsc->bhqs", q_lat.astype(ckv_cache.dtype),

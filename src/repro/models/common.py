@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.codr_linear import PackedLinear, dense_weight  # noqa: F401
 from repro.sharding import maybe_constrain
 
 DEFAULT_DTYPE = jnp.bfloat16
@@ -23,9 +24,18 @@ def embed_init(key, vocab: int, d: int, dtype=PARAM_DTYPE) -> jax.Array:
     return jax.random.normal(key, (vocab, d), dtype) * 0.02
 
 
-def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None
-           ) -> jax.Array:
-    y = jnp.dot(x, w.astype(x.dtype))
+def linear(x: jax.Array, w, b: jax.Array | None = None) -> jax.Array:
+    """``x @ w (+ b)`` — the single matmul every model projection routes
+    through.  A plain array executes as a dense ``jnp.dot``; a
+    :class:`repro.core.codr_linear.PackedLinear` leaf (a params tree
+    after ``repro.api.compile_params``) resolves through the backend
+    registry and executes from the packed bitstream — the decode-fused
+    transformer serving path (docs/DESIGN.md §2)."""
+    if isinstance(w, PackedLinear):
+        from repro.core import backends
+        y = backends.resolve(w.backend).matmul(x, w)
+    else:
+        y = jnp.dot(x, w.astype(x.dtype))
     if b is not None:
         y = y + b.astype(x.dtype)
     return y

@@ -18,8 +18,23 @@ except ImportError:                    # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import act_fn, dense_init, linear
+from repro.models.common import (PackedLinear, act_fn, dense_init,
+                                 dense_weight, linear)
 from repro.sharding import current_ctx
+
+# router logits + expert stacks consume raw weight arrays (jnp.dot with
+# explicit f32 casts, lax.ragged_dot, shard_map operands) rather than a
+# single matmul a backend could intercept — packed leaves are decoded
+# once per forward here (decode-on-dispatch, docs/DESIGN.md §2)
+_PACKABLE_KEYS = ("router", "w_experts_gate", "w_experts_in",
+                  "w_experts_out")
+
+
+def _dense_moe_params(p):
+    if not any(isinstance(p.get(k), PackedLinear) for k in _PACKABLE_KEYS):
+        return p
+    return {k: dense_weight(v) if k in _PACKABLE_KEYS else v
+            for k, v in p.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +165,7 @@ def _moe_2d(p, x, cfg, ctx):
 def moe_forward(p, x, cfg, mode: str = "train"):
     """x (B, S, d) → (B, S, d).  EP over 'model' when a mesh is active;
     2-D expert sharding for decode when ``cfg.moe_decode_2d``."""
+    p = _dense_moe_params(p)
     b, s, d = x.shape
     ctx = current_ctx()
     e = cfg.n_experts

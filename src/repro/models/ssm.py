@@ -16,7 +16,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import dense_init, linear
+from repro.models.common import dense_init, dense_weight, linear
 
 # ---------------------------------------------------------------------------
 # Mamba (S6) block
@@ -248,6 +248,9 @@ def _slstm_step(p, cfg, carry, wx_t):
 
 def slstm_forward(p, x, cfg, state=None):
     bsz, s, d = x.shape
+    # the recurrent mix consumes r_proj via einsum inside the scan step —
+    # decode a packed leaf once per forward, not once per timestep
+    p = {**p, "r_proj": dense_weight(p["r_proj"])}
     wx = linear(x, p["w_proj"]) + p["bias"].astype(x.dtype)
     if state is None:
         state = slstm_state_init(cfg, bsz)

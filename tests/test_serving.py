@@ -48,6 +48,43 @@ def test_codr_compress_params_end_to_end(key):
     assert tot_bits / tot_w < 8.0
 
 
+def test_sampled_accounting_matches_full(rng):
+    """``sample_rows`` samples the leading ROWS of the reshaped
+    ``(rows, d_out)`` matrix and scales the bit counts — on a
+    homogeneous seeded tensor the sampled estimate must agree with the
+    full encode within 10%."""
+    w = (rng.normal(size=(8192, 64)) * 0.02).astype(np.float32)
+    params = {"w_proj": w}
+    _, full = codr_compress_params(params, n_unique=16, sample_rows=None)
+    _, sampled = codr_compress_params(params, n_unique=16,
+                                      sample_rows=1024)
+    for field in ("codr_bits", "ucnn_bits", "scnn_bits", "pack_bits"):
+        f, s = getattr(full[0], field), getattr(sampled[0], field)
+        assert abs(f - s) / f < 0.10, (field, f, s)
+
+
+def test_sample_cols_deprecated_alias(rng):
+    w = (rng.normal(size=(4096, 32)) * 0.02).astype(np.float32)
+    with pytest.warns(DeprecationWarning, match="sample_rows"):
+        _, via_alias = codr_compress_params({"w_proj": w}, n_unique=16,
+                                            sample_cols=512)
+    _, direct = codr_compress_params({"w_proj": w}, n_unique=16,
+                                     sample_rows=512)
+    assert via_alias[0].codr_bits == direct[0].codr_bits
+
+
+def test_pack_bits_surfaced_in_report(rng):
+    """compress_tensor's fixed-width kernel pack size must survive into
+    TensorReport and the printed report — it is the serving path's
+    weight-HBM number."""
+    w = (rng.normal(size=(256, 64)) * 0.02).astype(np.float32)
+    _, reports = codr_compress_params({"q_proj": w}, n_unique=16)
+    assert reports[0].pack_bits > 0
+    # U=16 → 4-bit indices over every weight
+    assert reports[0].pack_bits_per_weight == pytest.approx(4.0, abs=0.5)
+    assert "pack" in codr_report(reports)
+
+
 def test_batch_server_ids_monotonic_across_flushes_and_failures(rng):
     """Request ids come from a dedicated monotonic counter: interleaved
     submit/flush cycles issue consecutive ids, and a flush that dies

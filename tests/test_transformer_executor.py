@@ -1,0 +1,183 @@
+"""Transformer compressed-weight executor: ``repro.api.compile_params``
+serving parity, jit/no-retrace behavior, and capability errors.
+
+The contract under test (docs/DESIGN.md §2): a params pytree whose
+projection leaves were packed into bitstream form must serve logits
+**bit-for-bit equal** to the quantize-*applied* reference lane
+(``serving.codr_compress_params``) when executed through the
+decode-then-matmul backend (``tiled``), and near-exactly through the
+fused ``codr_matmul`` Pallas kernel (f32 accumulation vs the reference's
+bf16 dot).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as codr
+from repro.configs import get_config, smoke_variant
+from repro.core.serving import codr_compress_params
+from repro.models import get_model
+
+B, S = 2, 8
+N_UNIQUE = 16
+
+# GQA+MLP / MLA+MoE+prologue / mLSTM+sLSTM (recurrent-einsum r_proj)
+PARITY_ARCHS = ["qwen2.5-3b", "deepseek-v2-236b", "xlstm-350m"]
+
+
+def _setup(arch, key, backend):
+    cfg = smoke_variant(get_config(arch))
+    api = get_model(cfg)
+    params = api.init_params(key, cfg)
+    ref_params, _ = codr_compress_params(params, n_unique=N_UNIQUE)
+    cp = codr.compile_params(params, codr.EncodeConfig(n_unique=N_UNIQUE),
+                             backend=backend, accounting=False)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return cfg, api, ref_params, cp, tokens
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit: packed decode-then-matmul lane vs quantize-applied params
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_packed_prefill_decode_bitwise_vs_quantize_applied(arch, key):
+    cfg, api, ref_params, cp, tokens = _setup(arch, key, "tiled")
+    assert cp.packed_paths, arch
+    lr, _ = api.prefill(ref_params, {"tokens": tokens}, cfg)
+    lp, _ = api.prefill(cp.params, {"tokens": tokens}, cfg)
+    np.testing.assert_array_equal(np.asarray(lr, np.float32),
+                                  np.asarray(lp, np.float32))
+
+    cache_r = api.init_cache(cfg, B, S)
+    cache_p = api.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, t, i: api.decode_step(p, c, t, i, cfg))
+    tok = tokens[:, 0]
+    for i in range(4):
+        l_r, cache_r = step(ref_params, cache_r, tok, jnp.int32(i))
+        l_p, cache_p = step(cp.params, cache_p, tok, jnp.int32(i))
+        np.testing.assert_array_equal(np.asarray(l_r, np.float32),
+                                      np.asarray(l_p, np.float32))
+        tok = jnp.argmax(l_r, -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel lane: near-exact, same argmax tokens
+# ---------------------------------------------------------------------------
+
+def test_fused_codr_matmul_lane_matches_reference(key):
+    cfg, api, ref_params, cp, tokens = _setup("qwen2.5-3b", key,
+                                              "codr_matmul")
+    lr, _ = api.prefill(ref_params, {"tokens": tokens}, cfg)
+    lp, _ = api.prefill(cp.params, {"tokens": tokens}, cfg)
+    a = np.asarray(lr, np.float32)
+    b = np.asarray(lp, np.float32)
+    # the fused kernel accumulates in f32 where the reference dot runs
+    # bf16 — differences are bounded by bf16 rounding of the same sums
+    assert np.abs(a - b).max() <= 0.02 * max(np.abs(a).max(), 1.0)
+    np.testing.assert_array_equal(a.argmax(-1), b.argmax(-1))
+
+    cache = api.init_cache(cfg, B, S)
+    cache_r = api.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, t, i: api.decode_step(p, c, t, i, cfg))
+    tok = tokens[:, 0]
+    for i in range(2):
+        l_r, cache_r = step(ref_params, cache_r, tok, jnp.int32(i))
+        l_p, cache = step(cp.params, cache, tok, jnp.int32(i))
+        a = np.asarray(l_r, np.float32)
+        b = np.asarray(l_p, np.float32)
+        assert np.abs(a - b).max() <= 0.02 * max(np.abs(a).max(), 1.0)
+        tok = jnp.argmax(l_r, -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# jit compatibility: packed leaves never retrace across decode steps
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_across_decode_steps(key):
+    cfg, api, _, cp, tokens = _setup("qwen2.5-3b", key, "codr_matmul")
+    traces = [0]
+
+    def f(p, c, t, i):
+        traces[0] += 1
+        return api.decode_step(p, c, t, i, cfg)
+
+    step = jax.jit(f)
+    cache = api.init_cache(cfg, B, S)
+    tok = tokens[:, 0]
+    for i in range(5):
+        logits, cache = step(cp.params, cache, tok, jnp.int32(i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert traces[0] == 1, f"decode_step retraced: {traces[0]} traces"
+
+
+# ---------------------------------------------------------------------------
+# capability errors
+# ---------------------------------------------------------------------------
+
+def test_conv_leaf_capability_error(rng):
+    # a ViT-style patch-projection conv leaf (OIHW, spatial trailing
+    # dims): the linear-only codr_matmul backend must reject it at
+    # compile time with its capability reason
+    params = {"patch_proj": rng.normal(size=(64, 8, 3, 3)
+                                       ).astype(np.float32)}
+    with pytest.raises(ValueError, match="no 'conv' path"):
+        codr.compile_params(params, backend="codr_matmul",
+                            accounting=False)
+
+
+def test_non_packed_backend_rejected(rng):
+    params = {"q_proj": rng.normal(size=(64, 64)).astype(np.float32)}
+    with pytest.raises(ValueError, match="packed-projection matmul"):
+        codr.compile_params(params, backend="smm", accounting=False)
+
+
+def test_no_packable_leaves_rejected(rng):
+    params = {"embed": rng.normal(size=(128, 64)).astype(np.float32)}
+    with pytest.raises(ValueError, match="no packable projection"):
+        codr.compile_params(params, accounting=False)
+
+
+# ---------------------------------------------------------------------------
+# packed leaf mechanics
+# ---------------------------------------------------------------------------
+
+def test_pack_projection_roundtrip_bitwise(rng):
+    from repro.core import ucr
+    w = (rng.normal(size=(3, 48, 40)) * 0.1).astype(np.float32)
+    pl = codr.pack_projection(w, n_unique=N_UNIQUE)
+    q, scale = ucr.quantize_int8(w.reshape(-1, 40))
+    ref = ucr.dequantize_int8(ucr.restrict_unique(q, N_UNIQUE),
+                              scale).reshape(w.shape)
+    np.testing.assert_array_equal(np.asarray(pl.dense()), ref)
+    # N=40 pads to the next whole uint32 word and crops back
+    assert pl.out_features == 40
+    assert pl.weight.shape[1] % (32 // pl.weight.bits) == 0
+    # lax.scan-style leading-axis slicing yields a valid per-matrix pack
+    sliced = jax.tree_util.tree_map(lambda a: a[1], pl)
+    assert isinstance(sliced, codr.PackedLinear)
+    np.testing.assert_array_equal(np.asarray(sliced.dense()), ref[1])
+
+
+def test_dense_weight_passthrough(rng):
+    w = rng.normal(size=(8, 8)).astype(np.float32)
+    assert codr.dense_weight(w) is w
+    assert codr.dense_weight(w, jnp.bfloat16).dtype == jnp.bfloat16
+
+
+def test_compiled_params_accounting(key):
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    api = get_model(cfg)
+    params = api.init_params(key, cfg)
+    cp = codr.compile_params(params, codr.EncodeConfig(n_unique=N_UNIQUE))
+    # measured bytes: packed indices beat bf16, report carries pack_bits
+    assert 0 < cp.hbm_bytes() < cp.dense_bf16_bytes()
+    assert cp.bits_per_weight() < 16
+    assert cp.reports and all(r.pack_bits > 0 for r in cp.reports)
+    assert "measured" in cp.summary()
+    # embeddings are quantize-applied, never packed
+    assert all("embed" not in p for p in cp.packed_paths)
+    assert any("embed" in p for p in cp.quantized_paths)
