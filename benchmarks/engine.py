@@ -17,7 +17,10 @@ synchronous bucketed batch server, and the async futures path
 serving mode**: an ``repro.models`` LM prefill/decode with every
 projection executing from the packed bitstream through the decode-fused
 ``codr_matmul`` backend (``repro.launch.serve.run_serve``), with weight
-HBM bytes measured on the stored pack.  CSV lines (the harness
+HBM bytes measured on the stored pack, and the **continuous-batching
+mode**: a slot-pooled ``ContinuousBatcher`` decode loop streaming
+request waves at concurrency 1/4/8 (tokens/s per level lands in the
+JSON under ``serve_continuous``).  CSV lines (the harness
 format): ``name,us_per_call,derived``; the JSON summary (default
 ``BENCH_engine.json``) is stamped with the git SHA and the
 encode-config metadata so the perf trajectory stays comparable PR over
@@ -146,6 +149,44 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
                    f"hbm_bytes={st['hbm_bytes']};"
                    f"bits_per_weight={st['bits_per_weight']:.2f}"))
 
+    # continuous batching over the same packed representation: one
+    # ContinuousBatcher (8 KV-cache slots, compiled once) streams
+    # request waves at concurrency 1 / 4 / 8 — tokens/s should scale
+    # with concurrency because every pooled decode step amortizes one
+    # packed weight fetch over all active slots
+    import jax as _jax
+    from repro.configs import get_config, smoke_variant
+    from repro.core.batching import ContinuousBatcher
+    from repro.models import get_model
+
+    cb_cfg = smoke_variant(get_config("qwen2.5-3b"))
+    cb_api = get_model(cb_cfg)
+    cb_params = cb_api.init_params(_jax.random.PRNGKey(0), cb_cfg)
+    cb_compiled = codr.compile_params(
+        cb_params, codr.EncodeConfig(n_unique=16), backend="codr_matmul")
+    cb_prompt_len = 4 if small else 8
+    cb_gen = 4 if small else 8
+    batcher = ContinuousBatcher(cb_compiled, cb_cfg, n_slots=8,
+                                max_len=cb_prompt_len + cb_gen)
+    prng = np.random.default_rng(2)
+    def _wave(n):
+        prompts = [prng.integers(0, cb_cfg.vocab_size, size=cb_prompt_len)
+                   for _ in range(n)]
+        hs = [batcher.submit(p, max_new_tokens=cb_gen) for p in prompts]
+        return sum(len(h.result(timeout=600)) for h in hs)
+    _wave(8)                                   # warm prefill + step jits
+    conc_toks_s: dict[str, float] = {}
+    for conc in (1, 4, 8):
+        with Timer() as t_cb:
+            n_toks = _wave(conc)
+        conc_toks_s[str(conc)] = n_toks / t_cb.dt
+        print(csv_line(f"engine_serve_continuous_c{conc}",
+                       t_cb.dt / n_toks * 1e6,
+                       f"arch={cb_cfg.name};backend=codr_matmul;"
+                       f"n_slots=8;tokens={n_toks};"
+                       f"toks_per_s={conc_toks_s[str(conc)]:.1f}"))
+    batcher.stop_async()
+
     for name, acc in compiled.sram_report(hw):
         print(csv_line(f"engine_sram_{name}", 0.0,
                        f"total_sram={acc.total_sram:.0f};"
@@ -173,6 +214,11 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
             "dense_bf16_bytes": st["dense_bf16_bytes"],
             "bits_per_weight": st["bits_per_weight"],
             "n_packed_tensors": st["n_packed"],
+        },
+        "serve_continuous": {
+            "arch": cb_cfg.name, "backend": "codr_matmul",
+            "n_slots": 8, "prompt_len": cb_prompt_len, "gen_len": cb_gen,
+            "concurrency_tokens_per_s": conc_toks_s,
         },
         "bits_per_weight": compiled.bits_per_weight(),
         "trace_count": compiled.trace_count,

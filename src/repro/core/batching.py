@@ -1,0 +1,424 @@
+"""Continuous batching: a production decode loop over packed weights.
+
+``ContinuousBatcher`` runs a fixed pool of KV-cache slots (one pooled
+cache whose batch axis is the slot axis) and drives every *active* slot
+forward with a single jitted ``decode_step`` per iteration:
+
+* **join-on-prefill** — a new request is prefilled on its own (batch-1,
+  its exact prompt length) and its cache block-written into a free slot
+  (:func:`repro.models.cache.write_slot`); the pooled decode batch never
+  stalls behind a long prompt, and in-flight requests never recompile.
+* **leave-on-EOS** — a slot retires the moment its request samples
+  ``eos_id`` or hits ``max_new_tokens``, freeing the slot for the next
+  admission while the rest of the pool keeps decoding.
+* **streaming** — :meth:`submit` returns a :class:`GenerationHandle`
+  immediately; iterating it yields tokens as they are produced, and
+  ``handle.result()`` blocks for the full sequence.
+
+Per-request results are **bit-identical** to a solo decode of the same
+prompt on the same params (:meth:`ContinuousBatcher.generate_reference`
+is that oracle, sharing the batcher's compiled functions): decode
+attention masks every cache position beyond a slot's own ``pos``, so a
+neighbour slot's content — or the stale tail a previous tenant left —
+contributes exactly 0.0, and XLA's per-row computation does not mix
+rows.  The slot state machine and streaming contract are documented in
+``docs/DESIGN.md`` §3.4.
+
+The async chassis (condition-variable worker, lazy start, stop/drain/
+restart, exception isolation) is :class:`repro.core.serving
+.AsyncWorkerLoop`, shared with ``CodrBatchServer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_mod
+import time
+from concurrent import futures
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.serving import AsyncWorkerLoop
+
+_DONE = object()                    # stream sentinel: generation finished
+
+
+class GenerationHandle:
+    """Streaming handle for one request.
+
+    * iterate it (``for tok in handle``) to stream tokens as the pool
+      produces them — the iterator ends at EOS/max-tokens and re-raises
+      a generation failure;
+    * ``handle.result(timeout)`` blocks for the full token list;
+    * ``handle.finish_reason`` is ``"eos"``, ``"length"``,
+      ``"cancelled"`` or ``"error"`` once finished.
+
+    Tokens are plain Python ints.  When the batcher was built with
+    ``record_logits=True``, ``handle.logits`` holds one float32 vocab
+    row per emitted token (the bit-identity witness).
+    """
+
+    def __init__(self, rid: int, prompt_len: int, max_new_tokens: int):
+        self.rid = rid
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.finish_reason: str | None = None
+        self.future: futures.Future = futures.Future()
+        self.logits: list[np.ndarray] = []
+        self._tokens: list[int] = []
+        self._stream: queue_mod.SimpleQueue = queue_mod.SimpleQueue()
+
+    # -- worker side --------------------------------------------------------
+    def _emit(self, tok: int, logits_row: np.ndarray | None = None) -> None:
+        self._tokens.append(tok)
+        if logits_row is not None:
+            self.logits.append(logits_row)
+        self._stream.put(tok)
+
+    def _finish(self, reason: str) -> None:
+        self.finish_reason = reason
+        self.future.set_result(list(self._tokens))
+        self._stream.put(_DONE)
+
+    def _fail(self, exc: BaseException, reason: str = "error") -> None:
+        self.finish_reason = reason
+        self.future.set_exception(exc)
+        self._stream.put(exc)
+
+    # -- caller side --------------------------------------------------------
+    def __iter__(self):
+        while True:
+            item = self._stream.get()
+            if item is _DONE:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+
+    def result(self, timeout: float | None = None) -> list[int]:
+        """Block until generation finishes; returns all emitted tokens."""
+        return self.future.result(timeout)
+
+    @property
+    def tokens(self) -> list[int]:
+        """Tokens emitted so far (snapshot; may still be growing)."""
+        return list(self._tokens)
+
+    def done(self) -> bool:
+        return self.future.done()
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One occupied pool slot (ACTIVE state of the slot machine)."""
+    handle: GenerationHandle
+    eos_id: int | None
+    last_tok: int                   # token fed to the next decode step
+    pos: int                        # cache position that step writes
+    n_gen: int                      # tokens emitted so far
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A submitted request waiting for a free slot (QUEUED state)."""
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: int | None
+    handle: GenerationHandle
+
+
+class ContinuousBatcher(AsyncWorkerLoop):
+    """Slot-pooled continuous-batching decode loop over an LM.
+
+    ``params`` may be a raw params pytree or an
+    :class:`repro.core.api.CompiledParams` (packed weights; its
+    ``.params`` pytree is served through the backend registry exactly as
+    in ``launch/serve.py --codr``).  Decoder-only families only — the
+    encoder-decoder cache (per-request encoder output) has no pooled
+    form here.
+
+    The worker admits up to ``prefill_per_step`` queued requests per
+    iteration (each prefilled at its own prompt length, outside the
+    decode batch), then advances every active slot with ONE pooled
+    ``decode_step`` whose per-slot positions ride in a ``(n_slots,)``
+    vector.  ``join_deadline_s > 0`` lets a partially-filled pool wait
+    that long after an admission for co-riders before decoding resumes
+    (a latency/throughput knob mirroring ``CodrBatchServer``'s
+    ``flush_deadline_s``).
+
+    A failed *prefill* fails only its own request's handle; a failed
+    pooled *decode step* fails the handles of exactly the slots that
+    were active in it.  The worker survives both and keeps serving.
+    """
+
+    _thread_name = "codr-continuous-batcher"
+
+    def __init__(self, params, cfg, *, n_slots: int = 4, max_len: int = 128,
+                 eos_id: int | None = None, prefill_per_step: int = 1,
+                 join_deadline_s: float = 0.0, record_logits: bool = False):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if max_len < 2:
+            raise ValueError("max_len must be >= 2")
+        if cfg.family == "encdec" or cfg.frontend:
+            raise NotImplementedError(
+                "ContinuousBatcher supports decoder-only LM configs "
+                f"(got family={cfg.family!r}, frontend={cfg.frontend!r})")
+        super().__init__()
+        from repro.models import get_model          # lazy: core → models
+        from repro.models import cache as cache_mod
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.prefill_per_step = max(1, prefill_per_step)
+        self.join_deadline_s = join_deadline_s
+        self.record_logits = record_logits
+        # CompiledParams duck-typing: serve from its packed pytree
+        self._params = getattr(params, "params", params)
+        self._api = get_model(cfg)
+        # slot axis per cache leaf, discovered structurally (stacked
+        # scan-carry leaves lead with n_periods, prologue leaves with
+        # batch) — no arrays materialized
+        self._axes = cache_mod.diff_axes(
+            jax.eval_shape(lambda: self._api.init_cache(cfg, 1, max_len)),
+            jax.eval_shape(lambda: self._api.init_cache(cfg, 2, max_len)))
+        self._prefill_fn = jax.jit(
+            lambda p, t: self._api.prefill(p, {"tokens": t}, cfg))
+        self._step_fn = jax.jit(
+            lambda p, pool, tok, pos: self._api.decode_step(
+                p, pool, tok, pos, cfg))
+        self._write_fn = jax.jit(
+            lambda pool, c, slot: cache_mod.write_slot(
+                pool, c, slot, self._axes))
+        self._pool = self._api.init_cache(cfg, n_slots, max_len)
+        self._slots: list[_Slot | None] = [None] * n_slots
+        self._pending: list[_Pending] = []
+        self._next_id = 0
+        self._abort_active = False
+        self._last_admit_t: float | None = None
+        # stats (written by the worker under _cv)
+        self.steps_run = 0
+        self.prefills_run = 0
+        self.requests_finished = 0
+        self.peak_active = 0
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, prompt, *, max_new_tokens: int = 16,
+               eos_id: int | None = None) -> GenerationHandle:
+        """Queue one prompt (1-D int token array).  Returns immediately
+        with a :class:`GenerationHandle`; the worker starts lazily.
+        ``eos_id`` overrides the batcher default for this request."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt_len {prompt.size} + max_new_tokens "
+                f"{max_new_tokens} exceeds pool max_len {self.max_len}")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError(
+                    "batcher is stopping; submit rejected (handle would "
+                    "never resolve)")
+            handle = GenerationHandle(self._next_id, int(prompt.size),
+                                      max_new_tokens)
+            self._next_id += 1
+            self._pending.append(_Pending(
+                prompt, max_new_tokens,
+                self.eos_id if eos_id is None else eos_id, handle))
+            if self._worker is None or not self._worker.is_alive():
+                self._start_locked()
+            self._cv.notify_all()
+        return handle
+
+    @property
+    def active(self) -> int:
+        with self._cv:
+            return sum(s is not None for s in self._slots)
+
+    @property
+    def pending(self) -> int:
+        with self._cv:
+            return len(self._pending)
+
+    # -- AsyncWorkerLoop hooks ----------------------------------------------
+    def _cancel_pending_locked(self) -> None:
+        self._abort_active = True
+        for p in self._pending:
+            p.handle._fail(futures.CancelledError(), reason="cancelled")
+        self._pending.clear()
+
+    def _loop(self) -> None:
+        with self._cv:
+            self._abort_active = False
+        while True:
+            with self._cv:
+                while not self._stopping:
+                    has_free = any(s is None for s in self._slots)
+                    n_active = sum(s is not None for s in self._slots)
+                    if self._pending and has_free:
+                        break                       # admission work
+                    if n_active:
+                        # join deadline: a partially-filled pool lingers
+                        # briefly after an admission so co-riders can
+                        # join the decode batch
+                        if (self.join_deadline_s > 0 and has_free
+                                and self._last_admit_t is not None):
+                            wait = (self._last_admit_t
+                                    + self.join_deadline_s
+                                    - time.monotonic())
+                            if wait > 0:
+                                self._cv.wait(wait)
+                                continue
+                        break                       # decode work
+                    self._cv.wait()
+                if self._stopping:
+                    if self._abort_active:
+                        for i, s in enumerate(self._slots):
+                            if s is not None:
+                                s.handle._fail(futures.CancelledError(),
+                                               reason="cancelled")
+                                self._slots[i] = None
+                        return
+                    if (not self._pending
+                            and not any(s is not None for s in self._slots)):
+                        return                      # drained
+                admits: list[tuple[int, _Pending]] = []
+                for _ in range(self.prefill_per_step):
+                    free = [i for i, s in enumerate(self._slots)
+                            if s is None]
+                    if not free or not self._pending:
+                        break
+                    req = self._pending.pop(0)
+                    # reserve the slot under the lock; prefill happens
+                    # outside it
+                    self._slots[free[0]] = _Slot(
+                        req.handle, req.eos_id, last_tok=-1,
+                        pos=-1, n_gen=0)
+                    admits.append((free[0], req))
+            for slot_idx, req in admits:
+                self._admit(slot_idx, req)
+            self._decode_active()
+
+    # -- worker internals ---------------------------------------------------
+    def _admit(self, slot_idx: int, req: _Pending) -> None:
+        """Prefill one request and install it in its reserved slot.  A
+        prefill failure releases the slot and fails only this handle."""
+        try:
+            logits, cache = self._prefill_fn(
+                self._params, jnp.asarray(req.prompt[None, :]))
+            self._pool = self._write_fn(self._pool, cache,
+                                        jnp.int32(slot_idx))
+            row = np.asarray(logits, np.float32).reshape(-1)
+        except Exception as e:      # noqa: BLE001 — lands on the handle
+            with self._cv:
+                self._slots[slot_idx] = None
+            req.handle._fail(e)
+            return
+        tok = int(np.argmax(row))
+        with self._cv:
+            slot = self._slots[slot_idx]
+            slot.last_tok = tok
+            slot.pos = int(req.prompt.size)
+            slot.n_gen = 1
+            self.prefills_run += 1
+            self._last_admit_t = time.monotonic()
+            n_active = sum(s is not None for s in self._slots)
+            self.peak_active = max(self.peak_active, n_active)
+        req.handle._emit(tok, row if self.record_logits else None)
+        self._maybe_retire(slot_idx, tok)
+
+    def _decode_active(self) -> None:
+        with self._cv:
+            active = [(i, s) for i, s in enumerate(self._slots)
+                      if s is not None]
+        if not active:
+            return
+        toks = np.zeros((self.n_slots,), np.int32)
+        poss = np.zeros((self.n_slots,), np.int32)
+        for i, s in active:
+            toks[i] = s.last_tok
+            poss[i] = s.pos
+        try:
+            logits, self._pool = self._step_fn(
+                self._params, self._pool, jnp.asarray(toks),
+                jnp.asarray(poss))
+            rows = np.asarray(logits, np.float32)
+        except Exception as e:      # noqa: BLE001 — exactly this batch
+            with self._cv:
+                for i, s in active:
+                    self._slots[i] = None
+                    self.requests_finished += 1
+                for _, s in active:
+                    s.handle._fail(e)
+            return
+        with self._cv:
+            self.steps_run += 1
+        for i, s in active:
+            tok = int(np.argmax(rows[i]))
+            s.pos += 1
+            s.n_gen += 1
+            s.last_tok = tok
+            s.handle._emit(tok,
+                           rows[i].copy() if self.record_logits else None)
+            self._maybe_retire(i, tok)
+
+    def _maybe_retire(self, slot_idx: int, tok: int) -> None:
+        with self._cv:
+            s = self._slots[slot_idx]
+            if s is None:
+                return
+            reason = None
+            if s.eos_id is not None and tok == s.eos_id:
+                reason = "eos"
+            elif s.n_gen >= s.handle.max_new_tokens:
+                reason = "length"
+            if reason is None:
+                return
+            self._slots[slot_idx] = None        # slot → FREE
+            self.requests_finished += 1
+            self._cv.notify_all()
+        s.handle._finish(reason)
+
+    # -- solo oracle --------------------------------------------------------
+    def generate_reference(self, prompt, *, max_new_tokens: int = 16,
+                           eos_id: int | None = None,
+                           record_logits: bool = False):
+        """Solo decode of ``prompt``: a fresh ``n_slots`` pool with only
+        slot 0 active, driven by the SAME compiled prefill/decode
+        functions the batcher uses.  This is the bit-identity oracle —
+        any pooled run of the same request must emit exactly these
+        tokens (and, with ``record_logits``, these logits bits).
+        Returns ``(tokens, logits_rows)``."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError("prompt + max_new_tokens exceeds max_len")
+        eos = self.eos_id if eos_id is None else eos_id
+        pool = self._api.init_cache(self.cfg, self.n_slots, self.max_len)
+        logits, cache = self._prefill_fn(self._params,
+                                         jnp.asarray(prompt[None, :]))
+        pool = self._write_fn(pool, cache, jnp.int32(0))
+        row = np.asarray(logits, np.float32).reshape(-1)
+        toks: list[int] = []
+        rows: list[np.ndarray] = []
+        tok, pos = int(np.argmax(row)), int(prompt.size)
+        toks.append(tok)
+        if record_logits:
+            rows.append(row)
+        while len(toks) < max_new_tokens and tok != eos:
+            tvec = np.zeros((self.n_slots,), np.int32)
+            pvec = np.zeros((self.n_slots,), np.int32)
+            tvec[0], pvec[0] = tok, pos
+            logits, pool = self._step_fn(self._params, pool,
+                                         jnp.asarray(tvec),
+                                         jnp.asarray(pvec))
+            r = np.asarray(logits, np.float32)[0]
+            tok, pos = int(np.argmax(r)), pos + 1
+            toks.append(tok)
+            if record_logits:
+                rows.append(r.copy())
+        return toks, rows

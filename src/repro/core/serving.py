@@ -177,10 +177,118 @@ def codr_report(reports: list[TensorReport]) -> str:
 
 
 # ---------------------------------------------------------------------------
+# async worker chassis (shared by CodrBatchServer and ContinuousBatcher)
+# ---------------------------------------------------------------------------
+
+class AsyncWorkerLoop:
+    """Condition-variable worker-thread chassis: lazy daemon start,
+    stop/drain/restart, and the can't-stop-from-the-worker guard.
+
+    Subclasses provide the actual work:
+
+    * :meth:`_loop` — the worker body.  It must re-check
+      ``self._stopping`` under ``self._cv`` and return once stopping
+      *and* (when draining) the pending work is gone.
+    * :meth:`_cancel_pending_locked` — called under ``self._cv`` by
+      ``stop_async(drain=False)`` to drop queued work (cancel futures,
+      fail handles, ...).
+
+    All shared state transitions happen under ``self._cv``; subclasses
+    must take the same lock for their own queue state so one lock
+    orders everything (the PR-6 sync-path race lived exactly in code
+    that skipped it).
+    """
+
+    _thread_name = "async-worker"
+
+    def __init__(self) -> None:
+        self._cv = threading.Condition()
+        self._worker: threading.Thread | None = None
+        self._stopping = False
+
+    # -- subclass hooks -----------------------------------------------------
+    def _loop(self) -> None:
+        raise NotImplementedError
+
+    def _cancel_pending_locked(self) -> None:
+        raise NotImplementedError
+
+    # -- lifecycle ----------------------------------------------------------
+    def start_async(self):
+        """Start the worker explicitly (idempotent)."""
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError(f"{type(self).__name__} is stopping")
+            if self._worker is None or not self._worker.is_alive():
+                self._start_locked()
+        return self
+
+    def _start_locked(self) -> None:
+        self._worker = threading.Thread(target=self._loop,
+                                        name=self._thread_name,
+                                        daemon=True)
+        self._worker.start()
+
+    def stop_async(self, *, drain: bool = True) -> None:
+        """Stop the worker.  ``drain=True`` (default) lets it finish the
+        pending work first; ``drain=False`` cancels pending work.
+        Idempotent; the loop can be restarted with :meth:`start_async`
+        afterwards.  Must not be called from the worker itself (e.g.
+        inside a ``Future`` done-callback, which runs on the worker
+        thread) — that raises ``RuntimeError`` without corrupting state.
+        """
+        if self._worker is threading.current_thread():
+            raise RuntimeError(
+                f"stop_async called from the {self._thread_name} worker "
+                "itself (done callbacks run on the worker thread) — stop "
+                "from another thread")
+        with self._cv:
+            worker = self._worker
+            self._stopping = True
+            if not drain:
+                self._cancel_pending_locked()
+            self._cv.notify_all()
+        try:
+            if worker is not None:
+                worker.join()
+        finally:
+            with self._cv:
+                self._worker = None
+                self._stopping = False
+
+    def __enter__(self):
+        return self.start_async()
+
+    def __exit__(self, *exc) -> None:
+        self.stop_async(drain=True)
+
+
+# ---------------------------------------------------------------------------
 # batched request path over a CoDR engine model
 # ---------------------------------------------------------------------------
 
-class CodrBatchServer:
+class FlushDispatchError(RuntimeError):
+    """A :meth:`CodrBatchServer.flush` chunk dispatch failed.
+
+    Attributes:
+        partial: submission-order output list for the flushed queue —
+            rows computed by chunks that succeeded before the failure,
+            ``None`` elsewhere.
+        failed: queue positions (within the flushed queue) of the
+            requests in the chunk whose dispatch raised.  These are
+            consumed, not requeued.
+        requeued: how many undispatched requests were restored to the
+            server queue (they will be served by the next ``flush``).
+    """
+
+    def __init__(self, msg: str, *, partial, failed, requeued):
+        super().__init__(msg)
+        self.partial = partial
+        self.failed = failed
+        self.requeued = requeued
+
+
+class CodrBatchServer(AsyncWorkerLoop):
     """Batched inference over a CoDR executable (a
     :class:`repro.core.engine.CodrModel` or a
     :class:`repro.core.api.CompiledModel` — anything with ``.run``).
@@ -218,12 +326,15 @@ class CodrBatchServer:
     ``with server: ...``.
     """
 
+    _thread_name = "codr-batch-server"
+
     def __init__(self, model, *, max_batch: int = 8,
                  flush_deadline_s: float = 0.01):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if flush_deadline_s <= 0:
             raise ValueError("flush_deadline_s must be > 0")
+        super().__init__()                  # _cv / _worker / _stopping
         self.model = model
         self.max_batch = max_batch
         self.flush_deadline_s = flush_deadline_s
@@ -233,11 +344,8 @@ class CodrBatchServer:
         self.requests_served = 0
         self.bucket_counts: dict[int, int] = {}   # batch bucket → dispatches
         # -- async state ------------------------------------------------
-        self._cv = threading.Condition()
         self._async_queue: list[tuple[np.ndarray, futures.Future]] = []
         self._oldest_t: float | None = None     # submit time of queue head
-        self._worker: threading.Thread | None = None
-        self._stopping = False
 
     def _bucket(self, n_real: int) -> int:
         b = 1
@@ -281,18 +389,46 @@ class CodrBatchServer:
         :meth:`flush` — deriving ids from it let ids collide with
         already-issued ones whenever a flush died mid-way).  An id is
         issued exactly once, forever.
+
+        Thread-safe: queue append and id issue happen under the same
+        lock the async worker and :meth:`flush` take, so concurrent
+        submitters can neither collide on an id nor corrupt the queue.
         """
-        self._queue.append(np.asarray(x, dtype=np.float32))
-        rid = self._next_id
-        self._next_id += 1
+        sample = np.asarray(x, dtype=np.float32)
+        with self._cv:
+            self._queue.append(sample)
+            rid = self._next_id
+            self._next_id += 1
         return rid
 
     def flush(self) -> list[np.ndarray]:
-        """Run all queued requests; returns outputs in submission order."""
-        outs: list[np.ndarray | None] = [None] * len(self._queue)
-        queue, self._queue = self._queue, []
-        for chunk_pos, batch, n_real, bucket in self._chunks(queue):
-            y = np.asarray(self.model.run(jnp.asarray(batch)))
+        """Run all queued requests; returns outputs in submission order.
+
+        If a chunk's dispatch raises, the failure is re-raised as
+        :class:`FlushDispatchError` carrying the already-computed
+        partial results, and every *undispatched* request is restored
+        to the queue head (submission order preserved) so the next
+        ``flush`` serves them — nothing is silently dropped.  The
+        failed chunk itself is NOT requeued: a poison request would
+        otherwise kill every subsequent flush forever.
+        """
+        with self._cv:
+            queue, self._queue = self._queue, []
+        outs: list[np.ndarray | None] = [None] * len(queue)
+        chunks = list(self._chunks(queue))
+        for ci, (chunk_pos, batch, n_real, bucket) in enumerate(chunks):
+            try:
+                y = np.asarray(self.model.run(jnp.asarray(batch)))
+            except Exception as e:          # noqa: BLE001 — rewrapped
+                tail = sorted(p for c in chunks[ci + 1:] for p in c[0])
+                with self._cv:
+                    self._queue[:0] = [queue[p] for p in tail]
+                raise FlushDispatchError(
+                    f"dispatch failed on a chunk of {n_real} request(s) "
+                    f"(bucket {bucket}); {len(tail)} undispatched "
+                    f"request(s) restored to the queue",
+                    partial=outs, failed=list(chunk_pos),
+                    requeued=len(tail)) from e
             for p, row in zip(chunk_pos, y[:n_real]):
                 outs[p] = row
             self._count(n_real, bucket)
@@ -337,58 +473,13 @@ class CodrBatchServer:
             self._cv.notify_all()
         return fut
 
-    def start_async(self) -> "CodrBatchServer":
-        """Start the background flush loop explicitly (idempotent)."""
-        with self._cv:
-            if self._stopping:
-                raise RuntimeError("server is stopping")
-            if self._worker is None or not self._worker.is_alive():
-                self._start_locked()
-        return self
+    def _cancel_pending_locked(self) -> None:
+        for _, fut in self._async_queue:
+            fut.cancel()
+        self._async_queue.clear()
+        self._oldest_t = None
 
-    def _start_locked(self) -> None:
-        self._worker = threading.Thread(target=self._flush_loop,
-                                        name="codr-batch-server",
-                                        daemon=True)
-        self._worker.start()
-
-    def stop_async(self, *, drain: bool = True) -> None:
-        """Stop the flush loop.  ``drain=True`` (default) dispatches the
-        remaining queue first; ``drain=False`` cancels pending futures.
-        Idempotent; the server can be restarted with :meth:`start_async`
-        afterwards.  Must not be called from the flush loop itself (e.g.
-        inside a ``Future`` done-callback, which runs on the worker
-        thread) — that raises ``RuntimeError`` without corrupting state.
-        """
-        if self._worker is threading.current_thread():
-            raise RuntimeError(
-                "stop_async called from the flush loop itself (done "
-                "callbacks run on the worker thread) — stop the server "
-                "from another thread")
-        with self._cv:
-            worker = self._worker
-            self._stopping = True
-            if not drain:
-                for _, fut in self._async_queue:
-                    fut.cancel()
-                self._async_queue.clear()
-                self._oldest_t = None
-            self._cv.notify_all()
-        try:
-            if worker is not None:
-                worker.join()
-        finally:
-            with self._cv:
-                self._worker = None
-                self._stopping = False
-
-    def __enter__(self) -> "CodrBatchServer":
-        return self.start_async()
-
-    def __exit__(self, *exc) -> None:
-        self.stop_async(drain=True)
-
-    def _flush_loop(self) -> None:
+    def _loop(self) -> None:
         """Background worker: wait for a trigger, take the whole queue,
         dispatch it bucketed with double-buffered staging."""
         while True:
@@ -468,16 +559,35 @@ def _try_device_put(batch: np.ndarray):
         return batch
 
 
-def codr_serving_stats(cfg, *, n_unique: int = 16, seed: int = 0) -> dict:
-    """Per-decode-token weight HBM traffic under each format (GB)."""
+def codr_serving_stats(cfg, *, n_unique: int = 16, seed: int = 0,
+                       reports: list[TensorReport] | None = None) -> dict:
+    """Per-decode-token weight HBM traffic under each format (GB).
+
+    When ``reports`` (the :class:`TensorReport` list from a real
+    ``codr_compress_params`` / ``api.compile_params`` run) is given,
+    bits/weight is **measured** from the model's own tensors.  Without
+    it the number is extrapolated from one synthetic 512×512 Gaussian
+    matrix — ``stats["source"]`` says which you got, and printers must
+    label the synthetic path as an estimate.
+    """
     n_active = cfg.active_param_count()
-    rng = np.random.default_rng(seed)
-    w = rng.normal(size=(512, 512)).astype(np.float32) * 0.02
-    _, rep = compress_tensor(w, n_unique=n_unique)
-    bits_pw = rep["codr_bits"] / w.size
+    if reports:
+        tot_w = sum(r.n_weights for r in reports)
+        bits_pw = sum(r.codr_bits for r in reports) / tot_w
+        pack_pw = sum(r.pack_bits for r in reports) / tot_w
+        source = "measured"
+    else:
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(512, 512)).astype(np.float32) * 0.02
+        _, rep = compress_tensor(w, n_unique=n_unique)
+        bits_pw = rep["codr_bits"] / w.size
+        pack_pw = rep["pack_bits"] / w.size
+        source = "synthetic-estimate"
     return {
         "bf16_gb": n_active * 2 / 1e9,
         "int8_gb": n_active * 1 / 1e9,
         "codr_gb": n_active * bits_pw / 8 / 1e9,
         "codr_bits_per_weight": bits_pw,
+        "pack_bits_per_weight": pack_pw,
+        "source": source,
     }

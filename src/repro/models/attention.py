@@ -104,6 +104,30 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq, dv)
 
 
+def decode_positions(pos, b: int) -> jax.Array:
+    """Decode-step position operand → the ``(B, 1)`` int32 matrix RoPE
+    consumes.  ``pos`` is either a scalar (every row writes the same
+    position — the classic single-request batch) or per-row ``(B,)``
+    (a continuous-batching slot pool where each row sits at its own
+    sequence position, docs/DESIGN.md §3.4)."""
+    p = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(p[:, None] if p.ndim else p, (b, 1))
+
+
+def cache_update(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
+    """Write the single-token block ``new`` (B, 1, ...) into the
+    (B, S, ...) ``cache`` at ``pos`` (scalar or per-row ``(B,)``).  The
+    scalar form keeps the contiguous ``dynamic_update_slice``; the
+    per-row form lowers to a batched one-row scatter — the slot-pool
+    cache-slicing primitive."""
+    new = new.astype(cache.dtype)
+    p = jnp.asarray(pos)
+    if p.ndim == 0:
+        start = (0, p) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new, start)
+    return cache.at[jnp.arange(cache.shape[0]), p].set(new[:, 0])
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, *, scale: float | None = None
                      ) -> jax.Array:
@@ -271,18 +295,20 @@ def gqa_forward(p, x, cfg, positions, *, causal=True):
 
 def gqa_decode(p, x, cfg, cache, pos):
     """Single-token decode. cache = (k, v) each (B, S, Hkv, hd);
-    pos scalar int32 — the position being written."""
+    pos is the position being written — scalar int32, or per-row (B,)
+    int32 when the batch is a continuous-batching slot pool whose rows
+    sit at different sequence positions (docs/DESIGN.md §3.4).  The
+    sequence-parallel ``dist`` lane needs a uniform write position, so
+    per-row pos always takes the standard lane."""
     k_cache, v_cache = cache
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    positions = decode_positions(pos, x.shape[0])
     q, k_new, v_new = _qkv(p, x, cfg, positions)
-    if cfg.decode_attn == "dist":
+    if cfg.decode_attn == "dist" and jnp.ndim(pos) == 0:
         out, k_cache, v_cache = decode_attention_dist(
             q, k_cache, v_cache, k_new, v_new, pos)
     else:
-        k_cache = jax.lax.dynamic_update_slice(
-            k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+        k_cache = cache_update(k_cache, k_new, pos)
+        v_cache = cache_update(v_cache, v_new, pos)
         out = decode_attention(q, k_cache, v_cache, pos)
     b = x.shape[0]
     out = linear(out.reshape(b, 1, -1), p["o_proj"])
@@ -366,13 +392,11 @@ def mla_decode(p, x, cfg, cache, pos):
     dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
     c = cfg.kv_lora_rank
     ckv_cache, krot_cache = cache
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = decode_positions(pos, b)
     qn, qrot = _mla_q(p, x, cfg, positions)              # (B,1,H,dn/dr)
     ckv_new, krot_new = _mla_ckv(p, x, cfg, positions)
-    ckv_cache = jax.lax.dynamic_update_slice(
-        ckv_cache, ckv_new.astype(ckv_cache.dtype), (0, pos, 0))
-    krot_cache = jax.lax.dynamic_update_slice(
-        krot_cache, krot_new.astype(krot_cache.dtype), (0, pos, 0))
+    ckv_cache = cache_update(ckv_cache, ckv_new, pos)
+    krot_cache = cache_update(krot_cache, krot_new, pos)
 
     # absorbed form consumes the raw weight, not a matmul — decode a
     # packed leaf on dispatch (identity for dense params)
@@ -384,7 +408,8 @@ def mla_decode(p, x, cfg, cache, pos):
               + _einsum_f32("bqhd,bsd->bhqs", qrot.astype(krot_cache.dtype),
                             krot_cache))
     scores = scores / math.sqrt(dn + dr)
-    mask = jnp.arange(ckv_cache.shape[1])[None, :] <= jnp.asarray(pos)
+    posb = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    mask = jnp.arange(ckv_cache.shape[1])[None, :] <= posb[:, None]
     scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     attn = jax.nn.softmax(scores, axis=-1)
     out_lat = _einsum_f32("bhqs,bsc->bqhc", attn.astype(ckv_cache.dtype),

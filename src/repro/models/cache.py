@@ -1,0 +1,76 @@
+"""KV-cache slot pools for continuous batching.
+
+A *pool* is just the pytree returned by a model's ``init_cache(cfg,
+n_slots, max_len)`` — the batch axis doubles as the slot axis, so one
+pooled ``decode_step`` call advances every active request at once (with
+per-row positions, see ``attention.decode_positions``).  The helpers
+here move single-request caches in and out of that pool:
+
+* ``diff_axes`` discovers, per leaf, which axis is the batch axis —
+  structurally, by comparing the shapes of a batch-1 and a batch-2
+  cache from ``jax.eval_shape`` (stacked scan-carry leaves put
+  ``n_periods`` first; prologue leaves lead with batch).
+* ``write_slot`` block-writes a batch-1 cache (e.g. a prefill result at
+  seq length P) into slot ``i`` of the pool.  Shorter-than-pool seq
+  axes are written as-is at offset 0: decode attention masks positions
+  beyond the slot's own ``pos``, so the stale tail is inert and results
+  stay bit-identical to a solo decode.
+* ``read_slot`` extracts slot ``i`` back out as a batch-1 cache.
+
+No imports from ``repro.core`` — this is a models-layer utility.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def diff_axes(tree_a, tree_b):
+    """Per-leaf axis where ``tree_a`` and ``tree_b`` shapes differ.
+
+    Both trees must share their structure; each leaf pair must differ in
+    rank-preserving fashion along exactly one axis (leaves with
+    identical shapes are rejected — the batch axis must be
+    discoverable).  Returns a pytree of ints with the same structure.
+    Feed it ``jax.eval_shape`` results so no arrays are materialized::
+
+        ax = diff_axes(jax.eval_shape(init, 1), jax.eval_shape(init, 2))
+    """
+    def one(la, lb):
+        if la.ndim != lb.ndim:
+            raise ValueError(f"rank mismatch {la.shape} vs {lb.shape}")
+        diffs = [i for i, (a, b) in enumerate(zip(la.shape, lb.shape))
+                 if a != b]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"need exactly one differing axis, got {la.shape} vs "
+                f"{lb.shape}")
+        return diffs[0]
+    return jax.tree.map(one, tree_a, tree_b)
+
+
+def write_slot(pool, cache, slot, axes):
+    """Write batch-1 ``cache`` into ``pool`` at slot index ``slot``.
+
+    ``axes`` is the ``diff_axes`` pytree locating each leaf's slot
+    axis.  Leaves whose non-slot dims are shorter than the pool's (a
+    seq-P prefill cache into a seq-max pool) land at offset 0, leaving
+    the pool's tail untouched — masked out by decode attention."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def one(pl, cl, ax):
+        start = [jnp.int32(0)] * pl.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(
+            pl, cl.astype(pl.dtype), tuple(start))
+    return jax.tree.map(one, pool, cache, axes)
+
+
+def read_slot(pool, slot, axes):
+    """Extract slot ``slot`` of ``pool`` as a batch-1 cache (full pool
+    sequence length — callers mask by position, they don't trim)."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def one(pl, ax):
+        return jax.lax.dynamic_slice_in_dim(pl, slot, 1, axis=ax)
+    return jax.tree.map(one, pool, axes)

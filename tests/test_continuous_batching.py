@@ -1,0 +1,242 @@
+"""Continuous-batching invariants: per-request bit-identity to solo
+decode (no cross-slot leakage), join-mid-stream, EOS retirement freeing
+slots, the join-deadline trigger with a half-full pool, streaming
+iteration, and stop/drain semantics.
+
+Bit-exactness tests use the dense qwen2.5-3b smoke variant: MoE decode
+uses a scatter-add whose per-token summation order varies with the
+co-resident token set, so only dense models guarantee identical float
+bits under different slot occupancy.
+"""
+import threading
+import time
+from concurrent import futures
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.batching import ContinuousBatcher
+
+ARCH = "qwen2.5-3b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config(ARCH))
+    from repro.models import get_model
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+            for n in lens]
+
+
+def test_cache_slot_helpers_roundtrip(setup):
+    """diff_axes finds each leaf's slot axis structurally; write_slot /
+    read_slot round-trip a batch-1 cache through the pool, including
+    short-seq prefill caches landing at offset 0."""
+    cfg, _ = setup
+    from repro.models import get_model
+    from repro.models.cache import diff_axes, read_slot, write_slot
+
+    api = get_model(cfg)
+    axes = diff_axes(jax.eval_shape(lambda: api.init_cache(cfg, 1, 16)),
+                     jax.eval_shape(lambda: api.init_cache(cfg, 2, 16)))
+    pool = api.init_cache(cfg, 3, 16)
+    one = jax.tree.map(lambda l: jax.random.normal(
+        jax.random.PRNGKey(0), l.shape, l.dtype),
+        api.init_cache(cfg, 1, 16))
+    pool = write_slot(pool, one, 1, axes)
+    back = read_slot(pool, 1, axes)
+    for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # untouched slots stay zero
+    for leaf in jax.tree.leaves(read_slot(pool, 0, axes)):
+        assert not np.asarray(leaf, np.float32).any()
+    # a shorter-seq cache (prefill at P=5) writes at offset 0
+    import jax.numpy as jnp
+    short = jax.tree.map(lambda l: jnp.ones(l.shape, l.dtype),
+                         jax.eval_shape(lambda: api.init_cache(cfg, 1, 5)))
+    pool = write_slot(pool, short, 2, axes)
+    assert np.isfinite(np.asarray(
+        jax.tree.leaves(read_slot(pool, 2, axes))[0], np.float32)).all()
+    # identical shapes leave no discoverable slot axis — rejected
+    with pytest.raises(ValueError, match="one differing axis"):
+        diff_axes(jax.eval_shape(lambda: api.init_cache(cfg, 1, 16)),
+                  jax.eval_shape(lambda: api.init_cache(cfg, 1, 16)))
+
+
+def test_no_cross_slot_leakage_bit_identical_to_solo(setup):
+    """Four mixed-length co-resident requests each produce exactly the
+    tokens AND logits bits of their own solo decode — neighbour slots
+    and stale cache tails contribute nothing."""
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=4, max_len=32,
+                           record_logits=True)
+    prompts = _prompts(cfg, [3, 5, 4, 7])
+    handles = [cb.submit(p, max_new_tokens=6) for p in prompts]
+    outs = [h.result(timeout=300) for h in handles]
+    cb.stop_async()
+    for p, h, out in zip(prompts, handles, outs):
+        ref_toks, ref_rows = cb.generate_reference(
+            p, max_new_tokens=6, record_logits=True)
+        assert out == ref_toks
+        assert h.finish_reason == "length"
+        assert len(h.logits) == len(ref_rows)
+        for got, ref in zip(h.logits, ref_rows):
+            np.testing.assert_array_equal(got, ref)
+
+
+def test_packed_params_bit_identical_to_solo(setup):
+    """Same invariant serving from the packed representation (the exact
+    decode-then-matmul lane), params compiled once for both paths."""
+    cfg, params = setup
+    import repro.api as codr
+    compiled = codr.compile_params(params, codr.EncodeConfig(n_unique=16),
+                                   backend="tiled")
+    cb = ContinuousBatcher(compiled, cfg, n_slots=3, max_len=24)
+    prompts = _prompts(cfg, [4, 6, 5], seed=1)
+    handles = [cb.submit(p, max_new_tokens=4) for p in prompts]
+    outs = [h.result(timeout=300) for h in handles]
+    cb.stop_async()
+    for p, out in zip(prompts, outs):
+        ref_toks, _ = cb.generate_reference(p, max_new_tokens=4)
+        assert out == ref_toks
+
+
+def test_join_mid_stream(setup):
+    """A request submitted while another is mid-decode joins the pool
+    and both finish with their solo-reference outputs."""
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=2, max_len=32)
+    p1, p2 = _prompts(cfg, [4, 6], seed=2)
+    h1 = cb.submit(p1, max_new_tokens=10)
+    # stream h1 until a few tokens are out, then join h2 mid-stream
+    it = iter(h1)
+    first = [next(it) for _ in range(3)]
+    h2 = cb.submit(p2, max_new_tokens=5)
+    rest = list(it)
+    out2 = h2.result(timeout=300)
+    cb.stop_async()
+    ref1, _ = cb.generate_reference(p1, max_new_tokens=10)
+    ref2, _ = cb.generate_reference(p2, max_new_tokens=5)
+    assert first + rest == ref1
+    assert out2 == ref2
+
+
+def test_eos_retirement_frees_slot(setup):
+    """A request hitting its EOS token retires early and frees the slot
+    for a later admission (more requests than slots all complete)."""
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=1, max_len=32)
+    prompt = _prompts(cfg, [5], seed=3)[0]
+    ref, _ = cb.generate_reference(prompt, max_new_tokens=8)
+    eos = ref[2]                       # an actually-emitted token → early stop
+    h = cb.submit(prompt, max_new_tokens=8, eos_id=eos)
+    out = h.result(timeout=300)
+    assert h.finish_reason == "eos"
+    assert out == ref[:3]              # stops AT the eos token, inclusive
+    # the slot is free again: a second request on the 1-slot pool runs
+    h2 = cb.submit(prompt, max_new_tokens=4)
+    assert h2.result(timeout=300) == ref[:4]
+    assert cb.requests_finished == 2
+    cb.stop_async()
+
+
+def test_join_deadline_half_full_pool(setup):
+    """With join_deadline_s set and a half-full pool, decode proceeds
+    after the deadline even though no co-rider ever joins."""
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=4, max_len=32,
+                           join_deadline_s=0.05)
+    prompts = _prompts(cfg, [4, 5], seed=4)
+    handles = [cb.submit(p, max_new_tokens=4) for p in prompts]
+    outs = [h.result(timeout=300) for h in handles]   # resolves ⇒ fired
+    assert cb.peak_active == 2                        # pool never filled
+    cb.stop_async()
+    for p, out in zip(prompts, outs):
+        ref, _ = cb.generate_reference(p, max_new_tokens=4)
+        assert out == ref
+
+
+def test_prompt_too_long_rejected(setup):
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=2, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        cb.submit(np.arange(10), max_new_tokens=8)
+    with pytest.raises(ValueError, match="empty"):
+        cb.submit(np.zeros((0,), np.int32))
+
+
+def test_stop_drain_false_cancels_and_restart(setup):
+    """drain=False cancels pending and in-flight handles; the batcher
+    restarts lazily on the next submit."""
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=1, max_len=64)
+    prompts = _prompts(cfg, [4, 4, 4], seed=5)
+    handles = [cb.submit(p, max_new_tokens=40) for p in prompts]
+    cb.stop_async(drain=False)
+    for h in handles:
+        with pytest.raises((futures.CancelledError, Exception)):
+            h.result(timeout=60)
+    assert all(h.finish_reason in ("cancelled", "error") for h in handles)
+    # submitting while stopped restarts the worker
+    h2 = cb.submit(prompts[0], max_new_tokens=3)
+    out = h2.result(timeout=300)
+    cb.stop_async()
+    ref, _ = cb.generate_reference(prompts[0], max_new_tokens=3)
+    assert out == ref
+
+
+def test_streaming_iteration_yields_incrementally(setup):
+    """Iterating a handle observes tokens before generation completes
+    (the stream is not a post-hoc replay of the final result)."""
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=1, max_len=64)
+    prompt = _prompts(cfg, [4], seed=6)[0]
+    h = cb.submit(prompt, max_new_tokens=20)
+    it = iter(h)
+    first = next(it)
+    assert not h.done()                # stream delivered before finish
+    rest = list(it)
+    assert h.done()
+    assert [first] + rest == h.result(timeout=10)
+    cb.stop_async()
+
+
+def test_encdec_rejected():
+    cfg = smoke_variant(get_config("seamless-m4t-medium"))
+    with pytest.raises(NotImplementedError, match="decoder-only"):
+        ContinuousBatcher({}, cfg)
+
+
+def test_concurrent_submitters_all_served(setup):
+    """Handles submitted from multiple threads all resolve with unique
+    ids — the submit path is locked."""
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=4, max_len=24)
+    prompt = _prompts(cfg, [4], seed=7)[0]      # one prompt, submitted 8×
+    handles: list = []
+    lock = threading.Lock()
+
+    def worker():
+        h = cb.submit(prompt, max_new_tokens=3)
+        with lock:
+            handles.append(h)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    outs = [h.result(timeout=300) for h in handles]
+    cb.stop_async()
+    assert sorted(h.rid for h in handles) == list(range(8))
+    ref, _ = cb.generate_reference(prompt, max_new_tokens=3)
+    assert all(o == ref for o in outs)      # identical prompts, same bits

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, smoke_variant
-from repro.launch.serve import run_serve
+from repro.launch.serve import run_serve, run_serve_continuous
 from repro.models import get_model
 
 ENCDEC = "seamless-m4t-medium"
@@ -86,3 +86,18 @@ def test_serve_codr_encdec():
                     use_codr=True, codr_backend="tiled", verbose=False)
     assert res["gen"].shape == (1, 2)
     assert res["hbm_bytes"] > 0
+
+
+def test_serve_continuous_checked():
+    """The CI smoke contract through the importable driver: concurrent
+    mixed-length requests streamed off the slot pool, every output
+    asserted bit-identical to the sequential reference (check=True
+    raises on any divergence)."""
+    res = run_serve_continuous(arch="qwen2.5-3b", n_requests=4, n_slots=2,
+                               prompt_len=4, gen_len=3, check=True,
+                               verbose=False)
+    assert res["checked"] == 4
+    assert len(res["gen"]) == 4
+    assert all(len(s) == 3 for s in res["gen"])
+    assert res["peak_active"] <= 2              # pool bound respected
+    assert res["prefills_run"] == 4

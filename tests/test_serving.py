@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, smoke_variant
-from repro.core.serving import (codr_compress_params, codr_report,
-                                codr_serving_stats, compress_tensor,
-                                restrict_unique)
+from repro.core.serving import (FlushDispatchError, codr_compress_params,
+                                codr_report, codr_serving_stats,
+                                compress_tensor, restrict_unique)
 from repro.models import get_model
 
 
@@ -116,10 +116,115 @@ def test_batch_server_ids_monotonic_across_flushes_and_failures(rng):
     assert issued == list(range(len(issued)))   # monotonic, no collisions
 
 
+def _conv_server(rng, max_batch=2):
+    """Conv-only compiled model (any input spatial size works — needed
+    for multi-shape-bucket flush tests, like the async suite uses)."""
+    import repro.api as codr_api
+
+    w = rng.normal(size=(6, 3, 3, 3)).astype(np.float32) * 0.5
+    w[rng.random(w.shape) > 0.5] = 0
+    spec = codr_api.ModelSpec([codr_api.LayerSpec.conv(
+        w, rng.normal(size=6).astype(np.float32), activation="relu",
+        name="c0")])
+    return codr_api.compile(spec, codr_api.EncodeConfig(n_unique=16)).serve(
+        max_batch=max_batch)
+
+
+def test_flush_failure_keeps_undispatched_tail(rng):
+    """The PR-6 headline bug: a chunk that raises mid-flush must not
+    drop the requests of chunks that never dispatched — they stay
+    queued, the next flush serves them without resubmission, and the
+    raised error carries the partial results of the chunks that DID
+    run."""
+    server = _conv_server(rng, max_batch=2)
+    good = rng.normal(size=(9, 9, 3)).astype(np.float32)
+    bad = rng.normal(size=(9, 9, 4)).astype(np.float32)   # 4 chans ≠ 3
+    tail = rng.normal(size=(11, 11, 3)).astype(np.float32)  # valid shape
+    # chunk order = shape-group insertion order: [good,good] runs, [bad]
+    # raises, [tail, tail] never dispatches
+    for x in (good, good, bad, tail, tail):
+        server.submit(x)
+    with pytest.raises(FlushDispatchError) as ei:
+        server.flush()
+    err = ei.value
+    assert err.requeued == 2                    # the two tail requests
+    assert err.failed == [2]                    # queue position of `bad`
+    # partial results: the first chunk's outputs survived on the error
+    assert err.partial[0] is not None and err.partial[1] is not None
+    assert err.partial[2] is None and err.partial[4] is None
+    # recovery without resubmission: the tail is still queued
+    outs = server.flush()
+    assert len(outs) == 2
+    assert all(o is not None and o.shape == (9, 9, 6) for o in outs)
+    # the poison request was consumed, not requeued — flush is clean now
+    assert server.flush() == []
+
+
+def test_flush_failure_does_not_requeue_poison(rng):
+    """The failed chunk itself is consumed: subsequent flushes do not
+    re-raise on a long-gone poison request."""
+    server = _conv_server(rng, max_batch=2)
+    bad = rng.normal(size=(9, 9, 4)).astype(np.float32)
+    server.submit(bad)
+    with pytest.raises(FlushDispatchError):
+        server.flush()
+    assert server.flush() == []                 # poison gone
+    good = rng.normal(size=(9, 9, 3)).astype(np.float32)
+    server.submit(good)
+    assert len(server.flush()) == 1
+
+
+def test_threaded_submit_ids_unique_and_all_served(rng):
+    """Sync-path locking: concurrent submitters must neither collide on
+    a request id nor corrupt the queue (pre-fix, submit mutated _queue
+    and _next_id with no lock)."""
+    import threading
+
+    server = _conv_server(rng, max_batch=4)
+    good = rng.normal(size=(9, 9, 3)).astype(np.float32)
+    ids: list[int] = []
+    lock = threading.Lock()
+
+    def worker():
+        for _ in range(25):
+            rid = server.submit(good)
+            with lock:
+                ids.append(rid)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(ids) == list(range(100))      # unique, gapless
+    outs = server.flush()
+    assert len(outs) == 100 and all(o is not None for o in outs)
+
+
 def test_serving_stats_ordering():
     cfg = get_config("qwen2.5-3b")
     stats = codr_serving_stats(cfg, n_unique=16)
     assert stats["codr_gb"] < stats["int8_gb"] < stats["bf16_gb"]
+    assert stats["source"] == "synthetic-estimate"
+
+
+def test_serving_stats_measured_from_reports(rng):
+    """With real TensorReports the stats are computed from the model's
+    own tensors (and labeled measured), not the synthetic 512x512
+    extrapolation."""
+    cfg = get_config("qwen2.5-3b")
+    w = (rng.normal(size=(512, 256)) * 0.02).astype(np.float32)
+    _, reports = codr_compress_params({"q_proj": w}, n_unique=16)
+    stats = codr_serving_stats(cfg, reports=reports)
+    assert stats["source"] == "measured"
+    tot_w = sum(r.n_weights for r in reports)
+    want = sum(r.codr_bits for r in reports) / tot_w
+    assert stats["codr_bits_per_weight"] == pytest.approx(want)
+    assert stats["pack_bits_per_weight"] == pytest.approx(
+        sum(r.pack_bits for r in reports) / tot_w)
+    # empty reports fall back to the labeled estimate
+    assert codr_serving_stats(cfg, reports=[])["source"] == \
+        "synthetic-estimate"
 
 
 def test_hlo_collective_parser_loop_multiplication():
