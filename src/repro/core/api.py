@@ -381,7 +381,8 @@ class CompiledModel:
         integer-valued inputs on the integer datapaths)."""
         return self.model.quantized_reference(batch)
 
-    def serve(self, *, max_batch: int = 8, flush_deadline_s: float = 0.01):
+    def serve(self, *, max_batch: int = 8, flush_deadline_s: float = 0.01,
+              max_pending: int | None = None):
         """Batched request path over this executable
         (:class:`repro.core.serving.CodrBatchServer`).
 
@@ -391,13 +392,23 @@ class CompiledModel:
                               pending :meth:`CodrBatchServer.submit_async`
                               request waits before a partial batch is
                               flushed anyway.
+        ``max_pending``       bounded admission: with a full queue,
+                              ``submit``/``submit_async`` shed the request
+                              with ``RejectedError`` (retry-after hint)
+                              instead of queueing unboundedly.  ``None``
+                              (default) keeps the queue unbounded.
 
         The synchronous path (``submit``/``flush``) ignores the deadline —
-        the caller owns batching cadence there.
+        the caller owns batching cadence there.  Resilience hooks (fault
+        injection, retry/quarantine, crash restart, supervised mesh
+        degradation) install via
+        ``server.configure_resilience(...)`` — see
+        ``repro.runtime.resilience`` and ``docs/DESIGN.md`` §3.5.
         """
         from repro.core.serving import CodrBatchServer
         return CodrBatchServer(self, max_batch=max_batch,
-                               flush_deadline_s=flush_deadline_s)
+                               flush_deadline_s=flush_deadline_s,
+                               max_pending=max_pending)
 
     # -- accounting ---------------------------------------------------------
     @property

@@ -492,10 +492,21 @@ class ShardedBackend(Backend):
                                    "the output-tile axis, any stride, "
                                    "float datapath, 1-device fallback")
 
+    # fault-injection hook (class attr: zero cost until installed; see
+    # repro.runtime.resilience — site "sharded.dispatch")
+    _injector = None
+
     def __init__(self, mesh=None, *, name: str | None = None):
         self._mesh = mesh
         if name is not None:
             self.name = name
+
+    def set_fault_injector(self, injector) -> "ShardedBackend":
+        """Install (or clear, with ``None``) a ``FaultInjector`` firing
+        the ``"sharded.dispatch"`` site on every whole-model dispatch —
+        the hook chaos runs use to simulate a lost mesh device."""
+        self._injector = injector
+        return self
 
     @property
     def mesh(self):
@@ -573,6 +584,8 @@ class ShardedBackend(Backend):
         # whole-model jitted chain (compile-once, like TiledBackend) —
         # per-layer shard_maps inline into one computation, the sharded
         # tile buffers staying device-resident across requests
+        if self._injector is not None:
+            self._injector.fire("sharded.dispatch")
         state = getattr(model, "_run_sharded", None)
         if state is None or state[0] != self.mesh:
             for layer in model.layers:

@@ -117,6 +117,7 @@ class _Slot:
     last_tok: int                   # token fed to the next decode step
     pos: int                        # cache position that step writes
     n_gen: int                      # tokens emitted so far
+    deadline: float | None = None   # absolute monotonic deadline
 
 
 @dataclasses.dataclass
@@ -126,6 +127,7 @@ class _Pending:
     max_new_tokens: int
     eos_id: int | None
     handle: GenerationHandle
+    deadline: float | None = None   # absolute monotonic deadline
 
 
 class ContinuousBatcher(AsyncWorkerLoop):
@@ -156,11 +158,14 @@ class ContinuousBatcher(AsyncWorkerLoop):
 
     def __init__(self, params, cfg, *, n_slots: int = 4, max_len: int = 128,
                  eos_id: int | None = None, prefill_per_step: int = 1,
-                 join_deadline_s: float = 0.0, record_logits: bool = False):
+                 join_deadline_s: float = 0.0, record_logits: bool = False,
+                 max_pending: int | None = None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if max_len < 2:
             raise ValueError("max_len must be >= 2")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
         if cfg.family == "encdec" or cfg.frontend:
             raise NotImplementedError(
                 "ContinuousBatcher supports decoder-only LM configs "
@@ -175,6 +180,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
         self.prefill_per_step = max(1, prefill_per_step)
         self.join_deadline_s = join_deadline_s
         self.record_logits = record_logits
+        self.max_pending = max_pending      # bounded admission (None=∞)
         # CompiledParams duck-typing: serve from its packed pytree
         self._params = getattr(params, "params", params)
         self._api = get_model(cfg)
@@ -203,33 +209,65 @@ class ContinuousBatcher(AsyncWorkerLoop):
         self.prefills_run = 0
         self.requests_finished = 0
         self.peak_active = 0
+        self.requests_shed = 0              # rejected at admission
+        self.requests_expired = 0           # deadline passed
 
     # -- submission ---------------------------------------------------------
     def submit(self, prompt, *, max_new_tokens: int = 16,
-               eos_id: int | None = None) -> GenerationHandle:
+               eos_id: int | None = None,
+               deadline_s: float | None = None) -> GenerationHandle:
         """Queue one prompt (1-D int token array).  Returns immediately
         with a :class:`GenerationHandle`; the worker starts lazily.
-        ``eos_id`` overrides the batcher default for this request."""
+        ``eos_id`` overrides the batcher default for this request.
+
+        Admission validates the request against the slot geometry up
+        front: the prompt plus its ``max_new_tokens`` headroom must fit
+        the pool's ``max_len`` (a request that would overflow its KV
+        slot mid-stream is rejected here with a clear ``ValueError``,
+        never admitted).  ``deadline_s`` bounds the request's total
+        latency — a request still queued (or still generating) when its
+        deadline passes fails with ``DeadlineExceeded``
+        (``finish_reason == "deadline"``) instead of holding a slot.
+        With ``max_pending`` set, a full admission queue sheds with
+        ``RejectedError`` rather than growing without bound.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
         if prompt.size + max_new_tokens > self.max_len:
             raise ValueError(
                 f"prompt_len {prompt.size} + max_new_tokens "
-                f"{max_new_tokens} exceeds pool max_len {self.max_len}")
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+                f"{max_new_tokens} = {prompt.size + max_new_tokens} "
+                f"exceeds pool max_len {self.max_len}: the request would "
+                f"overflow its KV slot mid-stream (shorten the prompt or "
+                f"lower max_new_tokens)")
+        deadline = None
+        if deadline_s is not None:
+            if deadline_s <= 0:
+                raise ValueError("deadline_s must be > 0 (or None)")
+            deadline = time.monotonic() + deadline_s
         with self._cv:
             if self._stopping:
                 raise RuntimeError(
                     "batcher is stopping; submit rejected (handle would "
                     "never resolve)")
+            if (self.max_pending is not None
+                    and len(self._pending) >= self.max_pending):
+                self.requests_shed += 1
+                from repro.runtime.resilience import RejectedError
+                raise RejectedError(
+                    f"admission queue full ({len(self._pending)}/"
+                    f"{self.max_pending} pending); retry once a slot "
+                    "frees", retry_after_s=self.join_deadline_s or 0.05)
             handle = GenerationHandle(self._next_id, int(prompt.size),
                                       max_new_tokens)
             self._next_id += 1
             self._pending.append(_Pending(
                 prompt, max_new_tokens,
-                self.eos_id if eos_id is None else eos_id, handle))
+                self.eos_id if eos_id is None else eos_id, handle,
+                deadline))
             if self._worker is None or not self._worker.is_alive():
                 self._start_locked()
             self._cv.notify_all()
@@ -252,10 +290,37 @@ class ContinuousBatcher(AsyncWorkerLoop):
             p.handle._fail(futures.CancelledError(), reason="cancelled")
         self._pending.clear()
 
+    def _fail_live_locked(self, exc: BaseException) -> None:
+        # worker died past the restart budget: every queued AND active
+        # handle gets the failure — result() and the stream iterator
+        # must never hang on a dead loop, even mid-generation
+        for p in self._pending:
+            if not p.handle.done():
+                p.handle._fail(exc)
+        self._pending.clear()
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                self._slots[i] = None
+                if not s.handle.done():
+                    s.handle._fail(exc)
+
+    def _guarded(self, fn):
+        """Run one dispatch under the retry/supervisor ladder; exactly
+        ``fn()`` when neither is configured."""
+        pol, sup = self._retry_policy, self._supervisor
+        if pol is None and sup is None:
+            return fn()
+        from repro.runtime import resilience
+        return resilience.retry_call(fn, policy=pol, supervisor=sup)
+
     def _loop(self) -> None:
         with self._cv:
             self._abort_active = False
         while True:
+            # injection site "batcher.worker": fires with no queue or
+            # slot state held mid-mutation, so a crash here restarts
+            # cleanly with every pending request and active slot intact
+            self._fire("batcher.worker")
             with self._cv:
                 while not self._stopping:
                     has_free = any(s is None for s in self._slots)
@@ -294,11 +359,22 @@ class ContinuousBatcher(AsyncWorkerLoop):
                     if not free or not self._pending:
                         break
                     req = self._pending.pop(0)
+                    if (req.deadline is not None
+                            and time.monotonic() >= req.deadline):
+                        # expired while queued: never burn a prefill on
+                        # a request nobody is waiting for
+                        self.requests_expired += 1
+                        from repro.runtime.resilience import \
+                            DeadlineExceeded
+                        req.handle._fail(DeadlineExceeded(
+                            "deadline expired before admission"),
+                            reason="deadline")
+                        continue
                     # reserve the slot under the lock; prefill happens
                     # outside it
                     self._slots[free[0]] = _Slot(
                         req.handle, req.eos_id, last_tok=-1,
-                        pos=-1, n_gen=0)
+                        pos=-1, n_gen=0, deadline=req.deadline)
                     admits.append((free[0], req))
             for slot_idx, req in admits:
                 self._admit(slot_idx, req)
@@ -307,13 +383,20 @@ class ContinuousBatcher(AsyncWorkerLoop):
     # -- worker internals ---------------------------------------------------
     def _admit(self, slot_idx: int, req: _Pending) -> None:
         """Prefill one request and install it in its reserved slot.  A
-        prefill failure releases the slot and fails only this handle."""
-        try:
+        prefill failure (after any configured retries — re-running the
+        prefill + slot write is idempotent) releases the slot and fails
+        only this handle."""
+
+        def _attempt():
+            self._fire("batcher.prefill")
             logits, cache = self._prefill_fn(
                 self._params, jnp.asarray(req.prompt[None, :]))
             self._pool = self._write_fn(self._pool, cache,
                                         jnp.int32(slot_idx))
-            row = np.asarray(logits, np.float32).reshape(-1)
+            return np.asarray(logits, np.float32).reshape(-1)
+
+        try:
+            row = self._guarded(_attempt)
         except Exception as e:      # noqa: BLE001 — lands on the handle
             with self._cv:
                 self._slots[slot_idx] = None
@@ -334,6 +417,23 @@ class ContinuousBatcher(AsyncWorkerLoop):
 
     def _decode_active(self) -> None:
         with self._cv:
+            # deadline sweep: a slot whose request expired mid-stream
+            # retires NOW — it must not hold a slot for tokens nobody
+            # will read
+            expired = [(i, s) for i, s in enumerate(self._slots)
+                       if s is not None and s.deadline is not None
+                       and time.monotonic() >= s.deadline]
+            for i, s in expired:
+                self._slots[i] = None
+                self.requests_finished += 1
+                self.requests_expired += 1
+            if expired:
+                from repro.runtime.resilience import DeadlineExceeded
+                for _, s in expired:
+                    s.handle._fail(DeadlineExceeded(
+                        f"deadline expired after {s.n_gen} token(s)"),
+                        reason="deadline")
+                self._cv.notify_all()
             active = [(i, s) for i, s in enumerate(self._slots)
                       if s is not None]
         if not active:
@@ -343,11 +443,20 @@ class ContinuousBatcher(AsyncWorkerLoop):
         for i, s in active:
             toks[i] = s.last_tok
             poss[i] = s.pos
-        try:
-            logits, self._pool = self._step_fn(
+
+        def _attempt():
+            # retry-safe: self._pool is only replaced on success, so a
+            # failed step recomputes from identical state → identical
+            # bits on the retry (the pooled step is deterministic)
+            self._fire("batcher.decode")
+            logits, pool = self._step_fn(
                 self._params, self._pool, jnp.asarray(toks),
                 jnp.asarray(poss))
-            rows = np.asarray(logits, np.float32)
+            return np.asarray(logits, np.float32), pool
+
+        t0 = time.monotonic()
+        try:
+            rows, self._pool = self._guarded(_attempt)
         except Exception as e:      # noqa: BLE001 — exactly this batch
             with self._cv:
                 for i, s in active:
@@ -356,6 +465,9 @@ class ContinuousBatcher(AsyncWorkerLoop):
                 for _, s in active:
                     s.handle._fail(e)
             return
+        sup = self._supervisor
+        if sup is not None:
+            sup.record_latency(time.monotonic() - t0)
         with self._cv:
             self.steps_run += 1
         for i, s in active:

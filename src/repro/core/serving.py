@@ -197,6 +197,19 @@ class AsyncWorkerLoop:
     must take the same lock for their own queue state so one lock
     orders everything (the PR-6 sync-path race lived exactly in code
     that skipped it).
+
+    **Supervision** (``docs/DESIGN.md`` §3.5): the worker thread runs
+    :meth:`_loop` under :meth:`_run_worker`, which catches *any* escape
+    — including ``BaseException`` crashes — and, when a
+    ``RestartPolicy`` is configured via :meth:`configure_resilience`,
+    backs off and re-enters the loop **on the same thread** so every
+    pending request survives the crash.  Past the restart budget (or
+    with no policy) the crash fails every live future/handle through
+    the :meth:`_fail_live_locked` hook, guaranteeing ``result()`` never
+    hangs on a dead loop.  ``configure_resilience`` also installs the
+    optional fault injector (:meth:`_fire` is the zero-overhead-when-
+    disabled site hook), retry policy, and serving supervisor consumed
+    by subclasses.
     """
 
     _thread_name = "async-worker"
@@ -205,6 +218,13 @@ class AsyncWorkerLoop:
         self._cv = threading.Condition()
         self._worker: threading.Thread | None = None
         self._stopping = False
+        # -- resilience (all optional; None ⇒ exact pre-resilience path)
+        self._injector = None           # runtime.resilience.FaultInjector
+        self._retry_policy = None       # runtime.resilience.RetryPolicy
+        self._restart_policy = None     # runtime.resilience.RestartPolicy
+        self._supervisor = None         # runtime.resilience.ServingSupervisor
+        self.worker_crashes = 0
+        self.worker_restarts = 0
 
     # -- subclass hooks -----------------------------------------------------
     def _loop(self) -> None:
@@ -212,6 +232,73 @@ class AsyncWorkerLoop:
 
     def _cancel_pending_locked(self) -> None:
         raise NotImplementedError
+
+    def _fail_live_locked(self, exc: BaseException) -> None:
+        """Under ``self._cv``: deliver ``exc`` to every live future /
+        handle (pending *and* in-flight) so no caller hangs after the
+        worker died for good.  Subclasses with queues must override."""
+
+    # -- resilience ---------------------------------------------------------
+    def configure_resilience(self, *, injector=None, retry_policy=None,
+                             restart_policy=None, supervisor=None):
+        """Install resilience hooks (all optional, from
+        ``repro.runtime.resilience``): a :class:`FaultInjector` firing
+        at this loop's sites, a :class:`RetryPolicy` for transient
+        dispatch failures (exhaustion ⇒ quarantine), a
+        :class:`RestartPolicy` for worker crashes, and a
+        :class:`ServingSupervisor` for latency-watch + mesh degradation.
+        With none installed every code path is byte-identical to the
+        unwired loop.  Returns ``self`` for chaining."""
+        with self._cv:
+            self._injector = injector
+            self._retry_policy = retry_policy
+            self._restart_policy = restart_policy
+            self._supervisor = supervisor
+        return self
+
+    def _fire(self, site: str) -> None:
+        """Fault-injection site hook: one attribute load + ``None``
+        check when disabled — the cost a production dispatch pays."""
+        inj = self._injector
+        if inj is not None:
+            inj.fire(site)
+
+    def _run_worker(self) -> None:
+        """Thread target: supervise :meth:`_loop`.  A normal return
+        ends the thread; any escape (worker crash — ``Exception`` or
+        injected ``BaseException``) consumes one restart from the
+        ``RestartPolicy`` budget and re-enters the loop after backoff,
+        pending work intact.  Budget exhausted ⇒ fail all live work
+        with ``WorkerCrashed`` (chaining the cause) and clear
+        ``self._worker`` so a later submit can lazily start fresh."""
+        while True:
+            try:
+                self._loop()
+                return
+            except BaseException as e:  # noqa: BLE001 — supervision net
+                with self._cv:
+                    self.worker_crashes += 1
+                    pol = self._restart_policy
+                    if (pol is not None and not self._stopping
+                            and self.worker_restarts < pol.max_restarts):
+                        n = self.worker_restarts
+                        self.worker_restarts += 1
+                    else:
+                        from repro.runtime.resilience import WorkerCrashed
+                        err = WorkerCrashed(
+                            f"{self._thread_name} worker died: {e!r}"
+                            + ("" if pol is None else
+                               f" (restart budget {pol.max_restarts} "
+                               "exhausted)"))
+                        err.__cause__ = e
+                        # clear the thread slot BEFORE failing waiters:
+                        # a woken submitter may immediately resubmit and
+                        # must be able to lazily start a fresh worker
+                        self._worker = None
+                        self._fail_live_locked(err)
+                        self._cv.notify_all()
+                        return
+                time.sleep(pol.delay(n))
 
     # -- lifecycle ----------------------------------------------------------
     def start_async(self):
@@ -224,7 +311,7 @@ class AsyncWorkerLoop:
         return self
 
     def _start_locked(self) -> None:
-        self._worker = threading.Thread(target=self._loop,
+        self._worker = threading.Thread(target=self._run_worker,
                                         name=self._thread_name,
                                         daemon=True)
         self._worker.start()
@@ -288,6 +375,25 @@ class FlushDispatchError(RuntimeError):
         self.requeued = requeued
 
 
+def _res():
+    """Lazy handle on ``repro.runtime.resilience`` — imported only when
+    a resilience feature (deadline, shedding, retry, injection) is
+    actually exercised, so the plain serving path never pays the
+    ``repro.runtime`` import."""
+    from repro.runtime import resilience
+    return resilience
+
+
+@dataclasses.dataclass
+class _AsyncReq:
+    """One queued async request: the sample, its future, and the
+    absolute monotonic deadline (``None`` ⇒ no deadline)."""
+
+    sample: np.ndarray
+    future: futures.Future
+    deadline: float | None = None
+
+
 class CodrBatchServer(AsyncWorkerLoop):
     """Batched inference over a CoDR executable (a
     :class:`repro.core.engine.CodrModel` or a
@@ -329,22 +435,31 @@ class CodrBatchServer(AsyncWorkerLoop):
     _thread_name = "codr-batch-server"
 
     def __init__(self, model, *, max_batch: int = 8,
-                 flush_deadline_s: float = 0.01):
+                 flush_deadline_s: float = 0.01,
+                 max_pending: int | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if flush_deadline_s <= 0:
             raise ValueError("flush_deadline_s must be > 0")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
         super().__init__()                  # _cv / _worker / _stopping
         self.model = model
         self.max_batch = max_batch
         self.flush_deadline_s = flush_deadline_s
-        self._queue: list[np.ndarray] = []
+        self.max_pending = max_pending      # bounded admission (None=∞)
+        self._queue: list[tuple[np.ndarray, float | None]] = []
         self._next_id = 0                   # monotonic request-id counter
         self.batches_run = 0
         self.requests_served = 0
         self.bucket_counts: dict[int, int] = {}   # batch bucket → dispatches
+        # -- resilience accounting (docs/DESIGN.md §3.5) ----------------
+        self.requests_shed = 0              # rejected at admission
+        self.requests_expired = 0           # deadline passed pre-dispatch
+        self.requests_quarantined = 0       # consumed after retry budget
+        self.quarantined: list[dict] = []   # bounded quarantine log
         # -- async state ------------------------------------------------
-        self._async_queue: list[tuple[np.ndarray, futures.Future]] = []
+        self._async_queue: list[_AsyncReq] = []
         self._oldest_t: float | None = None     # submit time of queue head
 
     def _bucket(self, n_real: int) -> int:
@@ -380,8 +495,27 @@ class CodrBatchServer(AsyncWorkerLoop):
             self.bucket_counts[bucket] = \
                 self.bucket_counts.get(bucket, 0) + 1
 
+    def _admit_deadline(self, deadline_s: float | None) -> float | None:
+        if deadline_s is None:
+            return None
+        if deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 (or None)")
+        return time.monotonic() + deadline_s
+
+    def _shed_locked(self, pending: int) -> None:
+        """Under ``self._cv``: reject admission when the bounded queue
+        is full (``RejectedError`` with a retry-after hint — one flush
+        deadline is when capacity frees up at the latest)."""
+        if self.max_pending is not None and pending >= self.max_pending:
+            self.requests_shed += 1
+            raise _res().RejectedError(
+                f"admission queue full ({pending}/{self.max_pending} "
+                f"pending); retry in ~{self.flush_deadline_s:.3f}s",
+                retry_after_s=self.flush_deadline_s)
+
     # -- synchronous path ---------------------------------------------------
-    def submit(self, x: np.ndarray) -> int:
+    def submit(self, x: np.ndarray, *, deadline_s: float | None = None
+               ) -> int:
         """Queue one sample (no batch dim).  Returns its request id.
 
         Ids come from a dedicated monotonic counter, NOT from
@@ -390,13 +524,23 @@ class CodrBatchServer(AsyncWorkerLoop):
         already-issued ones whenever a flush died mid-way).  An id is
         issued exactly once, forever.
 
+        ``deadline_s`` bounds how long the request may wait in the
+        queue: if the next :meth:`flush` starts after the deadline, the
+        request is dropped (its output row is ``None``, counted in
+        ``requests_expired``) instead of burning a dispatch slot on an
+        answer nobody is waiting for.  With ``max_pending`` set, a full
+        queue rejects admission with ``RejectedError`` instead of
+        growing without bound.
+
         Thread-safe: queue append and id issue happen under the same
         lock the async worker and :meth:`flush` take, so concurrent
         submitters can neither collide on an id nor corrupt the queue.
         """
         sample = np.asarray(x, dtype=np.float32)
+        deadline = self._admit_deadline(deadline_s)
         with self._cv:
-            self._queue.append(sample)
+            self._shed_locked(len(self._queue))
+            self._queue.append((sample, deadline))
             rid = self._next_id
             self._next_id += 1
         return rid
@@ -411,28 +555,91 @@ class CodrBatchServer(AsyncWorkerLoop):
         ``flush`` serves them — nothing is silently dropped.  The
         failed chunk itself is NOT requeued: a poison request would
         otherwise kill every subsequent flush forever.
+
+        With a :class:`~repro.runtime.resilience.RetryPolicy`
+        configured, *transient* chunk failures retry with backoff
+        first; only retry-budget exhaustion (the chunk is then recorded
+        in ``self.quarantined``) or a non-transient error reaches the
+        ``FlushDispatchError`` path.  Requests whose ``deadline_s``
+        already passed are dropped up front (``None`` output row,
+        ``requests_expired``).
         """
         with self._cv:
             queue, self._queue = self._queue, []
         outs: list[np.ndarray | None] = [None] * len(queue)
-        chunks = list(self._chunks(queue))
+        live_pos = list(range(len(queue)))
+        if any(d is not None for _, d in queue):
+            now = time.monotonic()
+            live_pos = [p for p in live_pos
+                        if queue[p][1] is None or now < queue[p][1]]
+            if len(live_pos) < len(queue):
+                with self._cv:
+                    self.requests_expired += len(queue) - len(live_pos)
+        chunks = list(self._chunks([queue[p][0] for p in live_pos]))
         for ci, (chunk_pos, batch, n_real, bucket) in enumerate(chunks):
             try:
-                y = np.asarray(self.model.run(jnp.asarray(batch)))
+                y = self._guarded_dispatch(batch)
             except Exception as e:          # noqa: BLE001 — rewrapped
-                tail = sorted(p for c in chunks[ci + 1:] for p in c[0])
+                qpos = [live_pos[p] for p in chunk_pos]
+                self._note_quarantine(e, n_real)
+                tail = sorted(live_pos[p] for c in chunks[ci + 1:]
+                              for p in c[0])
                 with self._cv:
                     self._queue[:0] = [queue[p] for p in tail]
                 raise FlushDispatchError(
                     f"dispatch failed on a chunk of {n_real} request(s) "
                     f"(bucket {bucket}); {len(tail)} undispatched "
                     f"request(s) restored to the queue",
-                    partial=outs, failed=list(chunk_pos),
+                    partial=outs, failed=qpos,
                     requeued=len(tail)) from e
             for p, row in zip(chunk_pos, y[:n_real]):
-                outs[p] = row
+                outs[live_pos[p]] = row
             self._count(n_real, bucket)
         return outs
+
+    def _model_run(self, batch):
+        """One model dispatch, routed through the supervisor's current
+        lane when one is installed (degradation changes the backend,
+        bit-for-bit never the outputs — DESIGN §3.3/§3.5)."""
+        sup = self._supervisor
+        if sup is not None:
+            return self.model.run(batch, backend=sup.backend)
+        return self.model.run(batch)
+
+    def _guarded_dispatch(self, batch: np.ndarray) -> np.ndarray:
+        """Dispatch one host chunk under the resilience ladder: fire the
+        injection site, run on the current lane, block to host.  With a
+        retry policy, transient failures re-execute with backoff (the
+        jitted dispatch is side-effect free on failure); with a
+        supervisor, device loss degrades the lane and retries there.
+        Unconfigured, this is exactly ``np.asarray(model.run(...))``."""
+
+        def _attempt():
+            self._fire("server.dispatch")
+            return np.asarray(self._model_run(jnp.asarray(batch)))
+
+        pol, sup = self._retry_policy, self._supervisor
+        if pol is None and sup is None:
+            return _attempt()
+        t0 = time.monotonic()
+        y = _res().retry_call(_attempt, policy=pol, supervisor=sup)
+        if sup is not None:
+            sup.record_latency(time.monotonic() - t0)
+        return y
+
+    def _note_quarantine(self, exc: BaseException, n_real: int) -> None:
+        """Record a consumed-not-requeued chunk.  Only exhaustion of a
+        configured retry budget counts as quarantine; a plain dispatch
+        error without a policy keeps PR-6 semantics untouched."""
+        if not isinstance(exc, _res().QuarantinedError):
+            return
+        with self._cv:
+            self.requests_quarantined += n_real
+            self.quarantined.append({
+                "n_requests": n_real, "attempts": exc.attempts,
+                "error": repr(exc.__cause__ or exc),
+                "t": time.monotonic()})
+            del self.quarantined[:-64]      # bounded log
 
     def serve(self, samples) -> list[np.ndarray]:
         """Convenience: submit + flush a list of single samples."""
@@ -447,7 +654,8 @@ class CodrBatchServer(AsyncWorkerLoop):
         with self._cv:
             return len(self._async_queue)
 
-    def submit_async(self, x: np.ndarray) -> futures.Future:
+    def submit_async(self, x: np.ndarray, *,
+                     deadline_s: float | None = None) -> futures.Future:
         """Queue one sample (no batch dim) on the background flush loop.
 
         Returns immediately with a :class:`concurrent.futures.Future`
@@ -458,24 +666,42 @@ class CodrBatchServer(AsyncWorkerLoop):
         future (``.result()`` re-raises it).  Starts the flush loop if it
         is not running.  Raises ``RuntimeError`` after :meth:`stop_async`
         began (a future that could never resolve must not be issued).
+
+        ``deadline_s`` bounds queue wait: a request still undispatched
+        when its deadline passes resolves to
+        :class:`~repro.runtime.resilience.DeadlineExceeded` instead of
+        occupying a batch slot.  With ``max_pending`` set, a full
+        admission queue sheds the request with ``RejectedError``
+        (``retry_after_s`` hint) rather than queueing unboundedly.
         """
         fut: futures.Future = futures.Future()
         sample = np.asarray(x, dtype=np.float32)
+        deadline = self._admit_deadline(deadline_s)
         with self._cv:
             if self._stopping:
                 raise RuntimeError("server is stopping; submit_async "
                                    "rejected (future would never resolve)")
+            self._shed_locked(len(self._async_queue))
             if self._worker is None or not self._worker.is_alive():
                 self._start_locked()
-            self._async_queue.append((sample, fut))
+            self._async_queue.append(_AsyncReq(sample, fut, deadline))
             if self._oldest_t is None:
                 self._oldest_t = time.monotonic()
             self._cv.notify_all()
         return fut
 
     def _cancel_pending_locked(self) -> None:
-        for _, fut in self._async_queue:
-            fut.cancel()
+        for req in self._async_queue:
+            req.future.cancel()
+        self._async_queue.clear()
+        self._oldest_t = None
+
+    def _fail_live_locked(self, exc: BaseException) -> None:
+        # crash past the restart budget: every undispatched future gets
+        # the WorkerCrashed (already-cancelled ones stay cancelled)
+        for req in self._async_queue:
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_exception(exc)
         self._async_queue.clear()
         self._oldest_t = None
 
@@ -483,6 +709,10 @@ class CodrBatchServer(AsyncWorkerLoop):
         """Background worker: wait for a trigger, take the whole queue,
         dispatch it bucketed with double-buffered staging."""
         while True:
+            # injection site "server.worker": fires BEFORE the queue is
+            # taken, so a crash here leaves every pending request queued
+            # for the restarted loop (or for _fail_live_locked)
+            self._fire("server.worker")
             with self._cv:
                 while not self._stopping:
                     if len(self._async_queue) >= self.max_batch:
@@ -508,18 +738,41 @@ class CodrBatchServer(AsyncWorkerLoop):
         """Run one drained queue: stage batch i+1's host→device transfer
         while batch i computes (double buffering), resolve each batch's
         futures as its results arrive, and propagate a failed dispatch
-        into exactly that batch's futures."""
+        into exactly that batch's futures.  With resilience configured
+        the chunks route through :meth:`_guarded_dispatch` (retry /
+        quarantine / supervisor lane) instead of the overlapped fast
+        path — the unconfigured path is exactly the pre-resilience
+        code."""
         # drop requests cancelled while queued BEFORE batching — they
         # must neither burn compute nor inflate requests_served (this
         # also moves every surviving future to RUNNING, so a cancel
-        # arriving after this point is a no-op)
-        live = [(s, f) for s, f in taken
-                if f.set_running_or_notify_cancel()]
+        # arriving after this point is a no-op).  Deadline-expired
+        # requests resolve to DeadlineExceeded here, for the same
+        # reason: never burn a batch slot on an abandoned request.
+        live = []
+        now = time.monotonic()
+        expired = 0
+        for req in taken:
+            if not req.future.set_running_or_notify_cancel():
+                continue
+            if req.deadline is not None and now >= req.deadline:
+                expired += 1
+                req.future.set_exception(_res().DeadlineExceeded(
+                    "deadline expired before dispatch"))
+                continue
+            live.append(req)
+        if expired:
+            with self._cv:
+                self.requests_expired += expired
         if not live:
             return
-        samples = [s for s, _ in live]
-        futs = [f for _, f in live]
+        samples = [r.sample for r in live]
+        futs = [r.future for r in live]
         chunks = list(self._chunks(samples))
+        if (self._retry_policy is not None or self._supervisor is not None
+                or self._injector is not None):
+            self._dispatch_chunks_resilient(chunks, futs)
+            return
         staged: list = [None] * len(chunks)
         if chunks:                      # stage the first transfer
             staged[0] = _try_device_put(chunks[0][1])
@@ -547,6 +800,26 @@ class CodrBatchServer(AsyncWorkerLoop):
                     futs[p].set_exception(err)
                 else:
                     futs[p].set_result(y[j])
+
+    def _dispatch_chunks_resilient(self, chunks, futs) -> None:
+        """Async dispatch under the resilience ladder: each chunk runs
+        through :meth:`_guarded_dispatch` (fire site → current lane →
+        block), retries transients, quarantines on budget exhaustion
+        (the chunk's futures get the ``QuarantinedError``; later chunks
+        are unaffected), and feeds per-chunk latency to the supervisor.
+        No double-buffer overlap here — a retried chunk must own its
+        dispatch end-to-end."""
+        for chunk_pos, batch, n_real, bucket in chunks:
+            try:
+                y = self._guarded_dispatch(batch)
+            except Exception as e:      # noqa: BLE001 — lands on futures
+                self._note_quarantine(e, n_real)
+                for p in chunk_pos:
+                    futs[p].set_exception(e)
+                continue
+            self._count(n_real, bucket)
+            for j, p in enumerate(chunk_pos):
+                futs[p].set_result(y[j])
 
 
 def _try_device_put(batch: np.ndarray):

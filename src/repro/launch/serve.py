@@ -153,12 +153,21 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
                          use_codr: bool = False, codr_unique: int = 16,
                          codr_backend: str = "codr_matmul",
                          check: bool = False, seed: int = 0,
+                         chaos_seed: int | None = None,
                          verbose: bool = True) -> dict:
     """Continuous-batching serving run: ``n_requests`` mixed-length
     prompts streamed through a :class:`repro.core.batching
     .ContinuousBatcher` slot pool.  With ``check=True`` every streamed
     output is asserted bit-identical to the sequential solo-decode
-    reference on the same params (the CI smoke contract)."""
+    reference on the same params (the CI smoke contract).
+
+    ``chaos_seed`` arms a deterministic fault plan
+    (:meth:`repro.runtime.resilience.FaultPlan.seeded` over the
+    batcher's worker/prefill/decode sites: transient dispatch errors,
+    injected latency, worker crashes) with retry + supervised-restart
+    budgets sized to the plan — the chaos contract is that every
+    request still finishes with bit-identical outputs, which
+    ``--chaos <seed> --check`` asserts in CI."""
     from repro.core.batching import ContinuousBatcher
 
     cfg = smoke_variant(get_config(arch))
@@ -185,6 +194,26 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
 
     batcher = ContinuousBatcher(params, cfg, n_slots=n_slots,
                                 max_len=max_len)
+    injector = None
+    if chaos_seed is not None:
+        from repro.runtime import resilience as res
+        plan = res.FaultPlan.seeded(
+            chaos_seed,
+            (res.SITE_BATCHER_WORKER, res.SITE_BATCHER_PREFILL,
+             res.SITE_BATCHER_DECODE),
+            n_faults=4, max_call=max(4, n_requests * gen_len // 2),
+            latency_s=0.002)
+        injector = res.FaultInjector(plan)
+        # budgets sized to the plan: every injected fault is survivable,
+        # so the run must finish with bit-identical outputs
+        batcher.configure_resilience(
+            injector=injector,
+            retry_policy=res.RetryPolicy(max_retries=max(2, len(plan)),
+                                         backoff_s=0.001),
+            restart_policy=res.RestartPolicy(
+                max_restarts=max(1, len(plan)), backoff_s=0.001))
+        if verbose:
+            print(f"chaos seed {chaos_seed}: {plan.describe()}")
     t0 = time.monotonic()
     handles = [batcher.submit(p, max_new_tokens=gen_len) for p in prompts]
     streamed = [[tok for tok in h] for h in handles]
@@ -200,6 +229,12 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
               f"({toks_per_s:.1f} tok/s); steps={batcher.steps_run} "
               f"prefills={batcher.prefills_run} "
               f"peak_active={batcher.peak_active}")
+        if injector is not None:
+            print(f"chaos: {len(injector.fired)}/{len(injector.plan)} "
+                  f"scheduled faults fired "
+                  f"({[f'{f.site}#{f.at_call}:{f.kind}' for f in injector.fired]}); "
+                  f"worker crashes={batcher.worker_crashes} "
+                  f"restarts={batcher.worker_restarts}")
         if compiled is not None:
             stats = codr_serving_stats(cfg, reports=compiled.reports)
             print(f"weight HBM ({stats['source']} on this model's "
@@ -226,6 +261,10 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
         "prefills_run": batcher.prefills_run,
         "peak_active": batcher.peak_active, "checked": matched,
         "backend": compiled.backend if compiled is not None else None,
+        "chaos_seed": chaos_seed,
+        "faults_fired": (len(injector.fired) if injector is not None
+                         else None),
+        "worker_restarts": batcher.worker_restarts,
     }
 
 
@@ -254,13 +293,20 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="assert streamed outputs are bit-identical to "
                          "the sequential reference (--continuous)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject a deterministic seeded fault plan "
+                         "(dispatch errors, latency, worker crashes) "
+                         "into the continuous-batching run; combine "
+                         "with --check to assert outputs survive "
+                         "bit-identically (--continuous)")
     args = ap.parse_args()
     if args.continuous:
         run_serve_continuous(
             arch=args.arch, n_requests=args.requests, n_slots=args.slots,
             prompt_len=args.prompt_len, gen_len=args.gen_len,
             use_codr=args.codr, codr_unique=args.codr_unique,
-            codr_backend=args.codr_backend, check=args.check)
+            codr_backend=args.codr_backend, check=args.check,
+            chaos_seed=args.chaos)
     else:
         run_serve(arch=args.arch, batch=args.batch,
                   prompt_len=args.prompt_len, gen_len=args.gen_len,

@@ -1,6 +1,15 @@
 from repro.runtime.loop import TrainLoop, TrainLoopConfig
-from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 from repro.runtime.elastic import ElasticMeshManager, HostSet
+from repro.runtime.resilience import (
+    DeadlineExceeded, Fault, FaultInjector, FaultPlan, QuarantinedError,
+    RejectedError, RestartPolicy, RetryPolicy, ServingSupervisor,
+    WorkerCrashed, retry_call,
+)
 
-__all__ = ["TrainLoop", "TrainLoopConfig", "StragglerMonitor",
-           "ElasticMeshManager", "HostSet"]
+__all__ = ["TrainLoop", "TrainLoopConfig", "StragglerConfig",
+           "StragglerMonitor", "ElasticMeshManager", "HostSet",
+           "Fault", "FaultPlan", "FaultInjector", "RetryPolicy",
+           "RestartPolicy", "ServingSupervisor", "retry_call",
+           "DeadlineExceeded", "RejectedError", "QuarantinedError",
+           "WorkerCrashed"]

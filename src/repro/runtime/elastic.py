@@ -35,13 +35,23 @@ def feasible_grid(chips: int, *, model_parallel: int,
                   global_batch: int) -> tuple[int, int]:
     """Largest (data, model) grid with data·model ≤ chips, model fixed,
     data dividing global_batch."""
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel must be >= 1, got "
+                         f"{model_parallel}")
+    if chips < model_parallel:
+        raise ValueError(
+            f"no feasible grid: {chips} surviving chip(s) cannot host "
+            f"even one model-parallel group of {model_parallel} (the "
+            f"model axis is fixed; recover hosts or lower "
+            f"model_parallel)")
     data = chips // model_parallel
     while data > 0 and global_batch % data:
         data -= 1
     if data == 0:
         raise ValueError(
             f"no feasible grid: chips={chips} model={model_parallel} "
-            f"batch={global_batch}")
+            f"batch={global_batch} — no data-axis size ≤ "
+            f"{chips // model_parallel} divides the global batch")
     return data, model_parallel
 
 

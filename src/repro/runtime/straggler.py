@@ -48,7 +48,16 @@ class StragglerMonitor:
             a = self.cfg.ewma_alpha
             self.ewma = (1 - a) * self.ewma + a * t
         med = np.median(self.ewma)
-        ratio = self.ewma / max(med, 1e-12)
+        if med <= 0:
+            # degenerate fleet (all-zero / mostly-zero timings, e.g. a
+            # cold start or a clock that hasn't ticked): any positive
+            # entry would ratio to +inf against a zero median and flag
+            # spuriously — report no evidence instead, and reset streaks
+            # so garbage samples never accumulate toward an action
+            self.flag_streak[:] = 0
+            return {"median": float(med),
+                    "ratio": np.ones(self.n_hosts), "actions": {}}
+        ratio = self.ewma / med
         flagged = ratio > self.cfg.threshold
         self.flag_streak = np.where(flagged, self.flag_streak + 1, 0)
         actions = {}

@@ -174,6 +174,58 @@ def test_prompt_too_long_rejected(setup):
         cb.submit(np.zeros((0,), np.int32))
 
 
+def test_submit_exact_fit_boundary(setup):
+    """prompt_len + max_new_tokens == max_len exactly fills the KV slot
+    and must be admitted; one more token would overflow mid-stream and
+    the rejection names both contributions."""
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=1, max_len=16)
+    prompt = _prompts(cfg, [12], seed=8)[0]
+    h = cb.submit(prompt, max_new_tokens=4)        # 12 + 4 == 16: fits
+    out = h.result(timeout=300)
+    cb.stop_async()
+    ref, _ = cb.generate_reference(prompt, max_new_tokens=4)
+    assert out == ref
+    with pytest.raises(ValueError,
+                       match=r"prompt_len 12 \+ max_new_tokens 5 = 17"):
+        cb.submit(prompt, max_new_tokens=5)        # off by one: rejected
+    with pytest.raises(ValueError, match="overflow its KV slot"):
+        cb.submit(prompt, max_new_tokens=5)
+
+
+def test_worker_crash_mid_generation_fails_handles_no_hang(setup):
+    """Killing the worker loop after partial streaming must _fail every
+    live handle — result() raises WorkerCrashed instead of hanging —
+    while the tokens already streamed stay readable, and the batcher
+    restarts lazily on the next submit."""
+    from repro.runtime import resilience as res
+
+    cfg, params = setup
+    cb = ContinuousBatcher(params, cfg, n_slots=2, max_len=32)
+    # worker-loop call 3: after admission + a couple of decode rounds,
+    # i.e. mid-generation with partial output already streamed
+    cb.configure_resilience(injector=res.FaultInjector(res.FaultPlan(
+        [res.Fault("batcher.worker", 3, "crash")])))
+    prompts = _prompts(cfg, [4, 5], seed=9)
+    handles = [cb.submit(p, max_new_tokens=12) for p in prompts]
+    for h in handles:
+        with pytest.raises(res.WorkerCrashed):
+            h.result(timeout=60)               # raises; never hangs
+    assert all(h.done() for h in handles)
+    assert all(h.finish_reason == "error" for h in handles)
+    assert cb.worker_crashes == 1
+    # partial stream survives the crash and matches the solo prefix
+    for p, h in zip(prompts, handles):
+        ref, _ = cb.generate_reference(p, max_new_tokens=12)
+        assert h.tokens == ref[:len(h.tokens)]
+    # lazy restart: the crash fault is consumed, a fresh submit serves
+    h2 = cb.submit(prompts[0], max_new_tokens=3)
+    out = h2.result(timeout=300)
+    cb.stop_async()
+    ref, _ = cb.generate_reference(prompts[0], max_new_tokens=3)
+    assert out == ref
+
+
 def test_stop_drain_false_cancels_and_restart(setup):
     """drain=False cancels pending and in-flight handles; the batcher
     restarts lazily on the next submit."""

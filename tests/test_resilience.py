@@ -1,0 +1,554 @@
+"""Serving-resilience invariants (``docs/DESIGN.md`` §3.5): seeded
+fault plans are deterministic and site-safe; injected dispatch failures
+retry to bit-identical results with no request lost or double-counted;
+retry-budget exhaustion quarantines exactly the poison chunk; bounded
+admission sheds with a retry-after hint; deadlines expire cleanly;
+worker crashes either restart with pending work preserved or fail every
+live future (never a hang); and the supervisor's mesh-degradation
+ladder keeps outputs bit-for-bit identical across every rung.
+
+The model under serve is the tiny conv-only CompiledModel from the
+async-server tests — small enough that chaos runs with retries stay in
+CI smoke time.
+"""
+import time
+
+import numpy as np
+import pytest
+
+import repro.api as codr
+from repro.core import backends
+from repro.runtime import resilience as res
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(6, 3, 3, 3)).astype(np.float32) * 0.5
+    w[rng.random(w.shape) > 0.5] = 0
+    spec = codr.ModelSpec([codr.LayerSpec.conv(
+        w, rng.normal(size=6).astype(np.float32), activation="relu",
+        name="c0")])
+    return codr.compile(spec, codr.EncodeConfig(n_unique=16))
+
+
+@pytest.fixture(scope="module")
+def samples():
+    rng = np.random.default_rng(3)
+    return [rng.normal(size=(9, 9, 3)).astype(np.float32)
+            for _ in range(6)]
+
+
+@pytest.fixture(scope="module")
+def clean_ref(compiled, samples):
+    """Reference outputs from a run with no resilience configured."""
+    srv = compiled.serve(max_batch=2, flush_deadline_s=0.005)
+    with srv:
+        outs = [f.result(timeout=300)
+                for f in [srv.submit_async(s) for s in samples]]
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# fault plans + injector
+# ---------------------------------------------------------------------------
+
+def test_seeded_plan_deterministic_and_site_safe():
+    sites = res.ALL_SITES
+    p1 = res.FaultPlan.seeded(42, sites, n_faults=8)
+    p2 = res.FaultPlan.seeded(42, sites, n_faults=8)
+    assert [(f.site, f.at_call, f.kind) for f in p1] == \
+           [(f.site, f.at_call, f.kind) for f in p2]
+    p3 = res.FaultPlan.seeded(43, sites, n_faults=8)
+    assert [(f.site, f.at_call, f.kind) for f in p1] != \
+           [(f.site, f.at_call, f.kind) for f in p3]
+    # kind policy: crashes only at worker-loop sites, device loss only
+    # at the sharded dispatch — every seeded plan is executable
+    for seed in range(25):
+        for f in res.FaultPlan.seeded(seed, sites, n_faults=8,
+                                      kinds=res.Fault.KINDS):
+            if f.kind == "crash":
+                assert f.site.endswith(".worker")
+            if f.kind == "device_loss":
+                assert f.site == res.SITE_SHARDED_DISPATCH
+            if f.site.endswith(".worker"):
+                assert f.kind in ("latency", "crash")
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="duplicate"):
+        res.FaultPlan([res.Fault("a.dispatch", 0),
+                       res.Fault("a.dispatch", 0, "latency")])
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        res.Fault("a.dispatch", 0, "meteor")
+    with pytest.raises(ValueError, match="at_call"):
+        res.Fault("a.dispatch", -1)
+    assert len(res.FaultPlan()) == 0
+    assert "empty" in res.FaultPlan().describe()
+
+
+def test_injector_fires_at_exact_call_index():
+    inj = res.FaultInjector(res.FaultPlan(
+        [res.Fault("x.dispatch", 2, "error")]))
+    inj.fire("x.dispatch")                  # call 0
+    inj.fire("x.dispatch")                  # call 1
+    inj.fire("y.dispatch")                  # other site: own counter
+    with pytest.raises(res.InjectedFault):
+        inj.fire("x.dispatch")              # call 2 → scheduled fault
+    inj.fire("x.dispatch")                  # call 3: clean again
+    assert inj.calls("x.dispatch") == 4
+    assert inj.calls("y.dispatch") == 1
+    assert [f.at_call for f in inj.fired] == [2]
+    assert inj.remaining() == 0
+
+
+# ---------------------------------------------------------------------------
+# retry_call semantics
+# ---------------------------------------------------------------------------
+
+def test_retry_call_transient_then_success():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise res.TransientDispatchError("blip")
+        return "ok"
+
+    pol = res.RetryPolicy(max_retries=3, backoff_s=1e-4)
+    assert res.retry_call(flaky, policy=pol) == "ok"
+    assert len(calls) == 3
+
+
+def test_retry_call_non_transient_raises_immediately():
+    calls = []
+
+    def broken():
+        calls.append(1)
+        raise ValueError("shape mismatch")      # never retryable
+
+    with pytest.raises(ValueError):
+        res.retry_call(broken,
+                       policy=res.RetryPolicy(max_retries=5,
+                                              backoff_s=1e-4))
+    assert len(calls) == 1
+
+
+def test_retry_call_exhaustion_quarantines_with_cause():
+    calls = []
+
+    def poison():
+        calls.append(1)
+        raise res.TransientDispatchError("always")
+
+    with pytest.raises(res.QuarantinedError) as ei:
+        res.retry_call(poison,
+                       policy=res.RetryPolicy(max_retries=2,
+                                              backoff_s=1e-4))
+    assert ei.value.attempts == 3               # initial + 2 retries
+    assert isinstance(ei.value.__cause__, res.TransientDispatchError)
+    assert len(calls) == 3
+    # no policy and no supervisor: exactly fn()
+    assert res.retry_call(lambda: 5) == 5
+
+
+def test_retry_policy_backoff_grows_and_jitters_bounded():
+    pol = res.RetryPolicy(backoff_s=0.01, backoff_mult=2.0, jitter=0.25)
+    rng = np.random.default_rng(0)
+    for attempt in range(4):
+        nominal = 0.01 * 2.0 ** attempt
+        d = pol.delay(attempt, rng)
+        assert 0.75 * nominal <= d <= 1.25 * nominal
+    assert res.RetryPolicy(jitter=0.0).delay(1) == 0.005 * 2.0
+
+
+# ---------------------------------------------------------------------------
+# server: retry / quarantine / shedding / deadlines
+# ---------------------------------------------------------------------------
+
+def test_async_retry_bit_identical_no_request_lost(compiled, samples,
+                                                   clean_ref):
+    """Transient dispatch failures + retry: every request resolves to
+    exactly the clean-run bits, served exactly once (no loss, no double
+    dispatch)."""
+    inj = res.FaultInjector(res.FaultPlan(
+        [res.Fault(res.SITE_SERVER_DISPATCH, 0, "error"),
+         res.Fault(res.SITE_SERVER_DISPATCH, 3, "error"),
+         res.Fault(res.SITE_SERVER_DISPATCH, 4, "latency",
+                   latency_s=0.003)]))
+    srv = compiled.serve(max_batch=2, flush_deadline_s=0.005)
+    srv.configure_resilience(
+        injector=inj,
+        retry_policy=res.RetryPolicy(max_retries=2, backoff_s=1e-3))
+    with srv:
+        outs = [f.result(timeout=300)
+                for f in [srv.submit_async(s) for s in samples]]
+    for got, ref in zip(outs, clean_ref):
+        np.testing.assert_array_equal(got, ref)
+    assert srv.requests_served == len(samples)      # exactly once each
+    assert srv.requests_quarantined == 0
+    assert len(inj.fired) >= 1
+
+
+def test_async_quarantine_isolates_poison_chunk(compiled, samples,
+                                                clean_ref):
+    """A chunk that fails through the whole retry budget is quarantined:
+    its futures get the QuarantinedError, every other chunk still
+    serves.  Nothing is requeued — poison cannot wedge the loop."""
+    # errors at dispatch calls 0,1,2 exhaust max_retries=2 for the first
+    # chunk; calls 3+ are clean for the rest
+    inj = res.FaultInjector(res.FaultPlan(
+        [res.Fault(res.SITE_SERVER_DISPATCH, i, "error")
+         for i in range(3)]))
+    srv = compiled.serve(max_batch=len(samples), flush_deadline_s=0.01)
+    srv.configure_resilience(
+        injector=inj,
+        retry_policy=res.RetryPolicy(max_retries=2, backoff_s=1e-3))
+    with srv:
+        f_poison = srv.submit_async(samples[0])
+        with pytest.raises(res.QuarantinedError):
+            f_poison.result(timeout=300)
+        # the loop survived: later requests are served normally
+        f_ok = srv.submit_async(samples[1])
+        np.testing.assert_array_equal(f_ok.result(timeout=300),
+                                      clean_ref[1])
+    assert srv.requests_quarantined == 1
+    assert len(srv.quarantined) == 1
+    assert srv.quarantined[0]["attempts"] == 3
+
+
+def test_bounded_admission_sheds_with_retry_after(compiled, samples):
+    srv = compiled.serve(max_batch=64, flush_deadline_s=0.2,
+                         max_pending=2)
+    with srv:
+        f1 = srv.submit_async(samples[0])
+        f2 = srv.submit_async(samples[1])
+        with pytest.raises(res.RejectedError) as ei:
+            srv.submit_async(samples[2])
+        assert ei.value.retry_after_s == pytest.approx(0.2)
+        f1.result(timeout=300)
+        f2.result(timeout=300)
+        # capacity freed: admission works again
+        srv.submit_async(samples[2]).result(timeout=300)
+    assert srv.requests_shed == 1
+    assert srv.requests_served == 3
+
+
+def test_async_deadline_expiry_cancels_cleanly(compiled, samples,
+                                               clean_ref):
+    srv = compiled.serve(max_batch=64, flush_deadline_s=0.05)
+    with srv:
+        f_dead = srv.submit_async(samples[0], deadline_s=1e-9)
+        f_live = srv.submit_async(samples[1])
+        with pytest.raises(res.DeadlineExceeded):
+            f_dead.result(timeout=300)
+        np.testing.assert_array_equal(f_live.result(timeout=300),
+                                      clean_ref[1])
+    assert srv.requests_expired == 1
+    assert srv.requests_served == 1
+
+
+def test_sync_flush_retry_and_quarantine(compiled, samples, clean_ref):
+    """Sync path: transient failures retry inside flush; exhaustion
+    raises FlushDispatchError chaining QuarantinedError with the tail
+    requeued (PR-6 tail-restore semantics extended, not replaced)."""
+    from repro.core.serving import FlushDispatchError
+
+    # retry success case: error at dispatch call 0 only
+    srv = compiled.serve(max_batch=2)
+    srv.configure_resilience(
+        injector=res.FaultInjector(res.FaultPlan(
+            [res.Fault(res.SITE_SERVER_DISPATCH, 0, "error")])),
+        retry_policy=res.RetryPolicy(max_retries=2, backoff_s=1e-3))
+    outs = srv.serve(samples[:4])
+    for got, ref in zip(outs, clean_ref[:4]):
+        np.testing.assert_array_equal(got, ref)
+
+    # exhaustion case: errors at calls 0,1 beat max_retries=1 → first
+    # chunk quarantined, second chunk requeued; next flush (call 2
+    # errors once, call 3 clean) serves the tail
+    srv2 = compiled.serve(max_batch=2)
+    srv2.configure_resilience(
+        injector=res.FaultInjector(res.FaultPlan(
+            [res.Fault(res.SITE_SERVER_DISPATCH, i, "error")
+             for i in (0, 1, 2)])),
+        retry_policy=res.RetryPolicy(max_retries=1, backoff_s=1e-3))
+    for s in samples[:4]:
+        srv2.submit(s)
+    with pytest.raises(FlushDispatchError) as ei:
+        srv2.flush()
+    assert isinstance(ei.value.__cause__, res.QuarantinedError)
+    assert ei.value.failed == [0, 1]
+    assert ei.value.requeued == 2
+    assert srv2.requests_quarantined == 2
+    tail = srv2.flush()
+    assert len(tail) == 2
+    for got, ref in zip(tail, clean_ref[2:4]):
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_sync_submit_deadline_and_shedding(compiled, samples):
+    srv = compiled.serve(max_batch=4, max_pending=2)
+    srv.submit(samples[0], deadline_s=1e-9)
+    srv.submit(samples[1])
+    with pytest.raises(res.RejectedError):
+        srv.submit(samples[2])
+    time.sleep(0.005)
+    outs = srv.flush()
+    assert outs[0] is None                      # expired, never dispatched
+    assert outs[1] is not None
+    assert srv.requests_expired == 1 and srv.requests_shed == 1
+
+
+# ---------------------------------------------------------------------------
+# worker crash: fail-live vs supervised restart
+# ---------------------------------------------------------------------------
+
+def test_worker_crash_without_restart_fails_futures_no_hang(compiled,
+                                                            samples):
+    """An unsupervised worker crash fails every pending future with
+    WorkerCrashed — result() raises instead of hanging — and the loop
+    restarts lazily on the next submit."""
+    inj = res.FaultInjector(res.FaultPlan(
+        [res.Fault(res.SITE_SERVER_WORKER, 0, "crash")]))
+    srv = compiled.serve(max_batch=64, flush_deadline_s=0.02)
+    srv.configure_resilience(injector=inj)      # no RestartPolicy
+    f = srv.submit_async(samples[0])
+    with pytest.raises(res.WorkerCrashed):
+        f.result(timeout=60)
+    assert srv.worker_crashes == 1 and srv.worker_restarts == 0
+    # lazy restart: a fresh worker serves the next request (the crash
+    # fault at worker call 0 is already consumed)
+    f2 = srv.submit_async(samples[1])
+    assert f2.result(timeout=300) is not None
+    srv.stop_async()
+
+
+def test_worker_crash_with_restart_preserves_pending(compiled, samples,
+                                                     clean_ref):
+    """With a RestartPolicy the crashed worker re-enters its loop and
+    the requests that were pending at crash time are still served —
+    bit-identically."""
+    inj = res.FaultInjector(res.FaultPlan(
+        [res.Fault(res.SITE_SERVER_WORKER, 0, "crash")]))
+    srv = compiled.serve(max_batch=2, flush_deadline_s=0.01)
+    srv.configure_resilience(
+        injector=inj,
+        restart_policy=res.RestartPolicy(max_restarts=2, backoff_s=1e-3))
+    with srv:
+        outs = [f.result(timeout=300)
+                for f in [srv.submit_async(s) for s in samples]]
+    for got, ref in zip(outs, clean_ref):
+        np.testing.assert_array_equal(got, ref)
+    assert srv.worker_crashes == 1
+    assert srv.worker_restarts == 1
+    assert srv.requests_served == len(samples)
+
+
+# ---------------------------------------------------------------------------
+# supervisor: degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_supervisor_device_loss_degrades_bit_identical(compiled,
+                                                       samples,
+                                                       clean_ref):
+    """An injected device loss on the sharded lane degrades to the next
+    rung (smaller mesh, or tiled at the bottom) and the dispatch that
+    observed the loss retries there — outputs stay bit-for-bit."""
+    inj = res.FaultInjector(res.FaultPlan(
+        [res.Fault(res.SITE_SHARDED_DISPATCH, 1, "device_loss")]))
+    sharded = backends.resolve("sharded")
+    sharded.set_fault_injector(inj)
+    try:
+        sup = res.ServingSupervisor(backend="sharded", fallback="tiled")
+        srv = compiled.serve(max_batch=2, flush_deadline_s=0.005)
+        srv.configure_resilience(
+            injector=inj, supervisor=sup,
+            retry_policy=res.RetryPolicy(max_retries=2, backoff_s=1e-3))
+        with srv:
+            outs = [f.result(timeout=300)
+                    for f in [srv.submit_async(s) for s in samples]]
+    finally:
+        sharded.set_fault_injector(None)
+    for got, ref in zip(outs, clean_ref):
+        np.testing.assert_array_equal(got, ref)
+    assert sup.degradations >= 1
+    assert sup.history[0]["from"] == "sharded"
+    assert sup.backend_name != "sharded"
+    # the ladder shrank the mesh (sharded@N on multi-device hosts) or
+    # fell back to the single-device lane
+    assert (sup.backend_name.startswith("sharded@")
+            or sup.backend_name == "tiled")
+
+
+def test_supervisor_ladder_exhaustion_falls_back_to_tiled():
+    sup = res.ServingSupervisor(backend="sharded", fallback="tiled")
+    last = None
+    for _ in range(32):                         # walk the whole ladder
+        name = sup.degrade("test walk")
+        if name is None:
+            break
+        last = name
+    assert last == "tiled"                      # bottom rung
+    assert sup.degrade("past bottom") is None   # exhausted: no-op
+    assert sup.backend_name == "tiled"
+    assert [h["from"] for h in sup.history][0] == "sharded"
+
+
+def test_supervisor_latency_watch_degrades_on_sustained_slowness():
+    from repro.runtime.straggler import StragglerConfig
+    sup = res.ServingSupervisor(
+        backend="sharded", fallback="tiled", warmup=4,
+        monitor_cfg=StragglerConfig(ewma_alpha=0.5, threshold=1.5,
+                                    patience=2))
+    for _ in range(4):                          # establish the baseline
+        assert sup.record_latency(0.001) is None
+    assert sup.baseline_s == pytest.approx(0.001)
+    lane = None
+    for _ in range(10):                         # sustained 20x slowness
+        lane = sup.record_latency(0.02)
+        if lane is not None:
+            break
+    assert lane is not None
+    assert sup.degradations == 1
+    assert "latency sustained" in sup.history[0]["reason"]
+    # transient blips after the reset do not immediately re-degrade
+    assert sup.record_latency(0.001) is None
+
+
+# ---------------------------------------------------------------------------
+# acceptance: mixed chaos run (ISSUE criterion)
+# ---------------------------------------------------------------------------
+
+def test_mixed_chaos_run_no_loss_no_dup_bit_identical(compiled, samples,
+                                                      clean_ref):
+    """Seeded plan injecting dispatch failures, a worker crash, and a
+    simulated device loss into a CodrBatchServer + ContinuousBatcher
+    mix: zero requests lost or duplicated, every handle resolves, the
+    sharded lane degrades with bit-identical outputs."""
+    import jax
+    from repro.configs import get_config, smoke_variant
+    from repro.core.batching import ContinuousBatcher
+    from repro.models import get_model
+
+    # --- server side: dispatch error + worker crash + device loss ----
+    plan = res.FaultPlan(
+        [res.Fault(res.SITE_SERVER_DISPATCH, 0, "error"),
+         res.Fault(res.SITE_SERVER_WORKER, 1, "crash"),
+         res.Fault(res.SITE_SHARDED_DISPATCH, 2, "device_loss"),
+         res.Fault(res.SITE_SERVER_DISPATCH, 4, "latency",
+                   latency_s=0.003)])
+    inj = res.FaultInjector(plan)
+    sharded = backends.resolve("sharded")
+    sharded.set_fault_injector(inj)
+    try:
+        sup = res.ServingSupervisor(backend="sharded", fallback="tiled")
+        srv = compiled.serve(max_batch=2, flush_deadline_s=0.005)
+        srv.configure_resilience(
+            injector=inj, supervisor=sup,
+            retry_policy=res.RetryPolicy(max_retries=3, backoff_s=1e-3),
+            restart_policy=res.RestartPolicy(max_restarts=2,
+                                             backoff_s=1e-3))
+        with srv:
+            futs = [srv.submit_async(s) for s in samples]
+            outs = [f.result(timeout=300) for f in futs]
+    finally:
+        sharded.set_fault_injector(None)
+    for got, ref in zip(outs, clean_ref):
+        np.testing.assert_array_equal(got, ref)      # bit-identical
+    assert srv.requests_served == len(samples)       # exactly once each
+    assert srv.requests_quarantined == 0
+    assert all(f.done() for f in futs)               # every one resolves
+
+    # --- batcher side: decode error + worker crash, outputs checked
+    # against the sequential solo-decode oracle ----------------------
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    cb = ContinuousBatcher(params, cfg, n_slots=2, max_len=24)
+    cb.configure_resilience(
+        injector=res.FaultInjector(res.FaultPlan(
+            [res.Fault(res.SITE_BATCHER_DECODE, 1, "error"),
+             res.Fault(res.SITE_BATCHER_WORKER, 2, "crash")])),
+        retry_policy=res.RetryPolicy(max_retries=2, backoff_s=1e-3),
+        restart_policy=res.RestartPolicy(max_restarts=1, backoff_s=1e-3))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (4, 6)]
+    handles = [cb.submit(p, max_new_tokens=5) for p in prompts]
+    outs_cb = [h.result(timeout=300) for h in handles]
+    cb.stop_async()
+    assert cb.worker_crashes == 1 and cb.worker_restarts == 1
+    for p, out in zip(prompts, outs_cb):
+        ref, _ = cb.generate_reference(p, max_new_tokens=5)
+        assert out == ref                            # bit-identical
+
+
+def test_batcher_decode_retry_bit_identity():
+    """Injected decode-step failures retried in place recompute from
+    unchanged pool state — the emitted tokens match the solo oracle."""
+    import jax
+    from repro.configs import get_config, smoke_variant
+    from repro.core.batching import ContinuousBatcher
+    from repro.models import get_model
+
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    cb = ContinuousBatcher(params, cfg, n_slots=2, max_len=24)
+    cb.configure_resilience(
+        injector=res.FaultInjector(res.FaultPlan(
+            [res.Fault(res.SITE_BATCHER_DECODE, 0, "error"),
+             res.Fault(res.SITE_BATCHER_PREFILL, 1, "error")])),
+        retry_policy=res.RetryPolicy(max_retries=2, backoff_s=1e-3))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (3, 5)]
+    handles = [cb.submit(p, max_new_tokens=4) for p in prompts]
+    outs = [h.result(timeout=300) for h in handles]
+    cb.stop_async()
+    for p, out in zip(prompts, outs):
+        ref, _ = cb.generate_reference(p, max_new_tokens=4)
+        assert out == ref
+
+
+def test_batcher_deadline_and_shedding():
+    import jax
+    from repro.configs import get_config, smoke_variant
+    from repro.core.batching import ContinuousBatcher
+    from repro.models import get_model
+
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+
+    # deadline expiry while queued: finish_reason "deadline", no hang
+    cb = ContinuousBatcher(params, cfg, n_slots=1, max_len=32,
+                           max_pending=2)
+    h_long = cb.submit(prompt, max_new_tokens=20)
+    h_dead = cb.submit(prompt, max_new_tokens=4, deadline_s=1e-9)
+    with pytest.raises(res.DeadlineExceeded):
+        h_dead.result(timeout=300)
+    assert h_dead.finish_reason == "deadline"
+    assert h_long.result(timeout=300)           # the long one completes
+    assert cb.requests_expired == 1
+    # bounded admission: occupy the slot (first streamed token proves
+    # h1 left the pending queue), fill the queue, next submit sheds
+    h1 = cb.submit(prompt, max_new_tokens=20)
+    next(iter(h1))                              # h1 admitted to its slot
+    h2 = cb.submit(prompt, max_new_tokens=4)
+    h3 = cb.submit(prompt, max_new_tokens=4)
+    with pytest.raises(res.RejectedError):
+        cb.submit(prompt, max_new_tokens=4)
+    assert cb.requests_shed == 1
+    for h in (h1, h2, h3):
+        h.result(timeout=300)
+    cb.stop_async()
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="max_retries"):
+        res.RetryPolicy(max_retries=0)
+    with pytest.raises(ValueError, match="max_restarts"):
+        res.RestartPolicy(max_restarts=0)
+    with pytest.raises(ValueError, match="at least one site"):
+        res.FaultPlan.seeded(0, ())

@@ -40,6 +40,37 @@ def test_straggler_no_false_positive_on_noise():
     assert not res["actions"]
 
 
+def test_straggler_all_equal_fleet_never_flags():
+    """A perfectly uniform fleet has ratio 1.0 everywhere — no host may
+    ever be flagged, no matter how long it runs."""
+    mon = StragglerMonitor(4, StragglerConfig(patience=1))
+    for _ in range(100):
+        res = mon.observe(np.full(4, 0.25))
+    assert not res["actions"]
+    assert not mon.flag_streak.any()
+
+
+def test_straggler_zero_median_fleet_no_spurious_flags():
+    """Degenerate timings (zero median — cold start, stuck clock) must
+    not ratio a positive entry to +inf and evict it: the monitor
+    reports no evidence and resets streaks."""
+    mon = StragglerMonitor(4, StragglerConfig(patience=1))
+    for _ in range(10):
+        res = mon.observe(np.array([0.5, 0.0, 0.0, 0.0]))
+    assert not res["actions"]
+    assert not mon.flag_streak.any()
+    assert np.all(res["ratio"] == 1.0)
+    # an all-zero fleet is the same degenerate case
+    mon2 = StragglerMonitor(3, StragglerConfig(patience=1))
+    res2 = mon2.observe(np.zeros(3))
+    assert not res2["actions"] and res2["median"] == 0.0
+    # ...and recovery to healthy positive timings still detects a real
+    # straggler afterwards
+    for _ in range(10):
+        res3 = mon2.observe(np.array([1.0, 1.0, 5.0]))
+    assert res3["actions"].get(2) == "evict"
+
+
 # ---------------------------------------------------------------------------
 # elastic mesh
 # ---------------------------------------------------------------------------
@@ -69,6 +100,32 @@ def test_elastic_manager_failure_and_recovery():
 def test_elastic_infeasible_raises():
     with pytest.raises(ValueError):
         feasible_grid(1, model_parallel=2, global_batch=4)
+
+
+def test_feasible_grid_too_few_chips_clear_message():
+    """chips < model_parallel must explain itself: the error names the
+    surviving chip count and the fixed model axis, not just 'no grid'."""
+    with pytest.raises(ValueError, match=r"3 surviving chip\(s\).*model-"
+                                         r"parallel group of 8"):
+        feasible_grid(3, model_parallel=8, global_batch=64)
+    with pytest.raises(ValueError, match="0 surviving"):
+        feasible_grid(0, model_parallel=1, global_batch=4)
+    with pytest.raises(ValueError, match="model_parallel must be >= 1"):
+        feasible_grid(4, model_parallel=0, global_batch=4)
+
+
+def test_elastic_manager_total_loss_raises_clear():
+    """Failing every host drives healthy_chips to 0; current_grid must
+    raise the hardened chips<model_parallel message (the supervisor's
+    fall-back-to-tiled trigger)."""
+    hosts = HostSet(n_hosts=2, chips_per_host=1,
+                    healthy=np.ones(2, dtype=bool))
+    mgr = ElasticMeshManager(hosts, model_parallel=1, global_batch=2)
+    mgr.mark_failed(0)
+    assert mgr.current_grid() == (1, 1)
+    mgr.mark_failed(1)
+    with pytest.raises(ValueError, match="0 surviving"):
+        mgr.current_grid()
 
 
 # ---------------------------------------------------------------------------
