@@ -2,12 +2,22 @@
 density (D) and unique-weight count (U).  Reports bits/weight for CoDR's
 customized RLE vs UCNN (fixed 5-bit RLE + transition bits) and SCNN
 (8-bit weights + 4-bit zero run lengths), and the headline ratios
-(paper: CoDR 1.69× vs UCNN, 2.80× vs SCNN on the original profiles)."""
+(paper: CoDR 1.69× vs UCNN, 2.80× vs SCNN on the original profiles).
+
+Also runs the **tuning lane** (``repro.tune``): a quality-vs-bits/weight
+Pareto curve over global U budgets plus the per-layer tuned plan and the
+best single global config on paper-CNN geometry, written to
+``BENCH_tune.json`` (git-SHA-stamped) so the tuned-vs-global gap is
+tracked PR over PR.  ``small=True`` (CI: ``--only compression
+--small``) keeps the Fig. 6 sweep to one model and shrinks the tuned
+spec to the smoke geometry."""
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
-from benchmarks.common import BASE_DENSITY, Timer, csv_line, \
+from benchmarks.common import BASE_DENSITY, Timer, bench_meta, csv_line, \
     make_weights, sampled_layer_vectors
 from repro.configs.paper_cnns import PAPER_CNNS
 from repro.core import rle
@@ -42,12 +52,73 @@ def model_bits(model: str, density: float, n_unique: int, rng) -> dict:
             "vs_ucnn": ucnn / codr, "vs_scnn": scnn / codr}
 
 
-def main(print_fn=print) -> list[str]:
+def tune_section(print_fn=print, small: bool = False,
+                 json_path: str = "BENCH_tune.json") -> list[str]:
+    """Quality-vs-bits/weight Pareto curve + tuned-vs-global comparison,
+    written to ``BENCH_tune.json``."""
+    from repro.launch.tune import run_tune
+    from repro.tune import pareto_curve
+
+    import repro.api as codr
+
+    hw = (20, 20) if small else (28, 28)
+    n_conv = 2 if small else 3
+    spec = codr.ModelSpec.from_paper_cnn(
+        "vgg16", n_conv=n_conv, n_out=10, ri=hw[0], ci=hw[1],
+        density=0.4, rng=np.random.default_rng(0))
+
+    with Timer() as t:
+        result = run_tune(model="vgg16", n_conv=n_conv, input_hw=hw,
+                          density=0.4, max_rel_err=0.03, verbose=False)
+    plan = result["plan"]
+    points = pareto_curve(spec, hw, n_uniques=(8, 16, 32, 64, 256),
+                          plans={"tuned": plan},
+                          batch=8 if small else 32)
+
+    lines = []
+    for p in points:
+        lines.append(csv_line(
+            f"tune_pareto/vgg16/{p['tag']}", 0.0,
+            f"bpw={p['bits_per_weight']:.2f}"
+            f";sram={p['sram_accesses']:.3e}"
+            f";top1={p['top1_match']:.3f}"
+            f";rel_err={p['rel_logit_err']:.4f}"))
+        print_fn(lines[-1])
+    tn, gl = result["tuned"], result["global"]
+    lines.append(csv_line(
+        "tune_pareto/vgg16/tuned_vs_global", t.dt * 1e6,
+        f"tuned_bpw={tn['bits_per_weight']:.3f}"
+        f";global_bpw={gl['bits_per_weight']:.3f}"
+        f";tuned_sram={tn['sram_accesses']:.3e}"
+        f";global_sram={gl['sram_accesses']:.3e}"
+        f";tuned_top1={tn['top1_match']:.3f}"
+        f";global_top1={gl['top1_match']:.3f}"))
+    print_fn(lines[-1])
+
+    with open(json_path, "w") as f:
+        json.dump({
+            "meta": bench_meta(small=small, input_hw=list(hw),
+                               n_conv=n_conv,
+                               budget=plan.budget.as_dict()),
+            "pareto": points,
+            "tuned": tn,
+            "global": {**gl,
+                       "config": result["global_config"].metadata()},
+            "plan": plan.to_json(),
+        }, f, indent=2)
+    print_fn(csv_line(f"tune_pareto/json:{json_path}", 0.0,
+                      f"points={len(points)}"))
+    return lines
+
+
+def main(print_fn=print, small: bool = False) -> list[str]:
     rng = np.random.default_rng(0)
     lines = []
     ratios_u, ratios_s = [], []
-    for model in PAPER_CNNS:
-        for tag, density, n_unique in SWEEPS:
+    models = ["vgg16"] if small else list(PAPER_CNNS)
+    sweeps = SWEEPS[:3] if small else SWEEPS
+    for model in models:
+        for tag, density, n_unique in sweeps:
             with Timer() as t:
                 r = model_bits(model, density, n_unique, rng)
             name = f"fig6_compression/{model}/{tag}"
@@ -65,6 +136,7 @@ def main(print_fn=print) -> list[str]:
         f"x_ucnn={np.mean(ratios_u):.2f}(paper:1.69)"
         f";x_scnn={np.mean(ratios_s):.2f}(paper:2.80)"))
     print_fn(lines[-1])
+    lines += tune_section(print_fn, small=small)
     return lines
 
 

@@ -1,13 +1,17 @@
 """Benchmark harness — one module per paper table/figure plus the
 roofline report.  Prints ``name,us_per_call,derived`` CSV lines.
 
-  python -m benchmarks.run [--only fig6|fig7|fig8|kernels|roofline|engine|decode]
+  python -m benchmarks.run [--only fig6|compression|fig7|fig8|kernels|
+                                   roofline|engine|decode]
                            [--small]
 
-``--small`` runs the size-aware suites (engine — the spec→compile→serve
-API path — and decode) in their CI smoke configuration; the CI workflow
-uses it so every PR appends a comparable, SHA-stamped point to the
-``BENCH_*.json`` perf trajectories.
+``compression`` is ``fig6`` plus the tuning-lane Pareto section (the
+quality-vs-bits/weight curve and tuned-vs-global comparison written to
+``BENCH_tune.json``).  ``--small`` runs the size-aware suites (engine —
+the spec→compile→serve API path — decode, and compression) in their CI
+smoke configuration; the CI workflow uses it so every PR appends a
+comparable, SHA-stamped point to the ``BENCH_*.json`` perf
+trajectories.
 """
 from __future__ import annotations
 
@@ -19,6 +23,7 @@ from benchmarks import compression, decode, energy, engine, kernels, \
 
 SUITES = {
     "fig6": compression.main,
+    "compression": compression.main,   # fig6 + tuning-lane Pareto curve
     "fig7": sram_access.main,
     "fig8": energy.main,
     "kernels": kernels.main,
@@ -26,7 +31,7 @@ SUITES = {
     "engine": engine.main,
     "decode": decode.main,
 }
-SMALL_AWARE = {"engine", "decode"}     # mains accepting a small= kwarg
+SMALL_AWARE = {"engine", "decode", "fig6", "compression"}  # small= kwarg
 
 
 def main(argv=None) -> None:
@@ -36,7 +41,12 @@ def main(argv=None) -> None:
                     help="CI smoke sizes for the suites that support it "
                          f"({', '.join(sorted(SMALL_AWARE))})")
     args = ap.parse_args(argv)
-    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    if args.only:
+        suites = {args.only: SUITES[args.only]}
+    else:                       # run each suite once despite name aliases
+        seen: set = set()
+        suites = {n: f for n, f in SUITES.items()
+                  if not (f in seen or seen.add(f))}
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites.items():

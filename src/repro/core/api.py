@@ -307,8 +307,33 @@ class EncodeConfig:
         if not 3 <= self.n_unique <= 256:
             raise ValueError(f"n_unique must be in [3, 256], "
                              f"got {self.n_unique}")
-        if min(self.t_m, self.t_n, self.t_m_linear) < 1:
-            raise ValueError("tile sizes must be >= 1")
+        for field in ("t_m", "t_n", "t_m_linear"):
+            v = getattr(self, field)
+            if not isinstance(v, (int, np.integer)) or isinstance(v, bool):
+                raise ValueError(f"{field} must be an integer >= 1, "
+                                 f"got {v!r} ({type(v).__name__})")
+            if v < 1:
+                raise ValueError(f"{field} must be >= 1, got {v} — tile "
+                                 f"sizes are channel counts, not flags")
+        if self.rle_params is not None:
+            try:
+                p = tuple(self.rle_params)
+            except TypeError:
+                p = (self.rle_params,)
+            if len(p) != 3:
+                raise ValueError(
+                    f"rle_params must be a (delta, rep, index) triple of "
+                    f"bit-lengths, got {self.rle_params!r}")
+            for stream, b in zip(("delta", "rep", "index"), p):
+                if not isinstance(b, (int, np.integer)) \
+                        or isinstance(b, bool) or not 1 <= b <= 16:
+                    raise ValueError(
+                        f"rle_params {stream} bit-length must be an "
+                        f"integer in [1, 16], got {b!r} (the escape "
+                        f"fallback is 8-bit; widths past 16 can never "
+                        f"win the §III-C search)")
+            object.__setattr__(self, "rle_params",
+                               tuple(int(b) for b in p))
         if self.decode_source not in ("bitstream", "ucr"):
             raise ValueError(f"unknown decode_source "
                              f"{self.decode_source!r}")
@@ -320,6 +345,27 @@ class EncodeConfig:
         d["rle_params"] = (list(self.rle_params)
                           if self.rle_params is not None else None)
         return d
+
+
+def _plan_config(plan, name: str, default: EncodeConfig) -> EncodeConfig:
+    """Resolve a layer's per-layer config from a plan.
+
+    A plan is anything with ``config_for(name, default)`` — e.g.
+    :class:`repro.tune.TunePlan` — or a plain ``{name: EncodeConfig}``
+    dict.  Layers the plan does not cover get ``default``, so a global
+    config is exactly the degenerate empty/one-entry plan.
+    """
+    if plan is None:
+        return default
+    config_for = getattr(plan, "config_for", None)
+    if config_for is not None:
+        cfg = config_for(name, default)
+    else:
+        cfg = plan.get(name, default)
+    if not isinstance(cfg, EncodeConfig):
+        raise TypeError(f"plan entry for layer {name!r} must be an "
+                        f"EncodeConfig, got {type(cfg).__name__}")
+    return cfg
 
 
 # ---------------------------------------------------------------------------
@@ -342,11 +388,13 @@ class CompiledModel:
     """
 
     def __init__(self, model: "_engine.CodrModel", spec: ModelSpec,
-                 config: EncodeConfig, backend: _backends.Backend):
+                 config: EncodeConfig, backend: _backends.Backend,
+                 plan=None):
         self.model = model
         self.spec = spec
         self.config = config
         self.backend = backend
+        self.plan = plan              # per-layer tune plan, or None
 
     # -- execution ----------------------------------------------------------
     def run(self, batch, *, backend=None) -> jax.Array:
@@ -440,6 +488,45 @@ class CompiledModel:
         through the conv stack automatically."""
         return self.model.sram_report(input_hw, **kw)
 
+    def layer_table(self, input_hw: tuple[int, int] | None = None) -> str:
+        """Human-readable per-layer accounting: the U budget and
+        effective tile each layer encoded under, its measured
+        bits/weight, and — when the model was compiled with a tune plan
+        — the tuner's predicted bits/weight and SRAM accesses next to
+        the measured numbers, so a plan is inspectable without
+        re-running the benchmark.
+
+        ``input_hw`` enables the measured-SRAM column (per-layer
+        effective tiling, same counting as :meth:`sram_report`); without
+        it conv SRAM cannot be counted and the column shows ``-``.
+        """
+        plan_layers = getattr(self.plan, "layers", None) or {}
+        measured_sram: dict[str, float] = {}
+        if input_hw is not None:
+            measured_sram = {
+                name: acc.total_sram
+                for name, acc in self.model.sram_report(
+                    input_hw, per_layer_tiling=True)}
+        hdr = (f"{'layer':<16} {'kind':<7} {'U':>4} {'t_m':>5} "
+               f"{'bits/w':>7} {'pred b/w':>9} {'sram':>12} "
+               f"{'pred sram':>12}")
+        lines = [hdr, "-" * len(hdr)]
+        for st in self.stats():
+            lp = plan_layers.get(st.name)
+            pred_bpw = (f"{lp.predicted_bits_per_weight:9.2f}"
+                        if lp is not None else f"{'-':>9}")
+            pred_sram = (f"{lp.predicted_sram:12.3e}"
+                         if lp is not None else f"{'-':>12}")
+            sram = (f"{measured_sram[st.name]:12.3e}"
+                    if st.name in measured_sram else f"{'-':>12}")
+            lines.append(
+                f"{st.name:<16} {st.kind:<7} {st.n_unique_budget:>4} "
+                f"{st.t_m:>5} {st.bits_per_weight:7.2f} {pred_bpw} "
+                f"{sram} {pred_sram}")
+        lines.append(f"{'total':<16} {'':<7} {'':>4} {'':>5} "
+                     f"{self.bits_per_weight():7.2f}")
+        return "\n".join(lines)
+
     def verify_roundtrip(self) -> None:
         """Assert decode(bitstreams) == quantize(original floats) for
         every layer; raises ``AssertionError`` naming the first layer
@@ -453,13 +540,21 @@ class CompiledModel:
 
 
 def compile(spec: ModelSpec, config: EncodeConfig | None = None, *,
-            backend: str | _backends.Backend = "tiled") -> CompiledModel:
+            backend: str | _backends.Backend = "tiled",
+            plan=None) -> CompiledModel:
     """Run the offline pipeline once over a spec; return the executable.
 
     The backend is resolved through the registry and capability-checked
     against the spec BEFORE any encoding work, so a stride the backend
     cannot lower or a conv layer handed to a linear-only kernel fails
     fast with the reason.
+
+    ``plan`` — optional per-layer encode configs: a
+    :class:`repro.tune.TunePlan` (anything with
+    ``config_for(name, default)``) or a plain ``{name: EncodeConfig}``
+    dict.  Layers the plan does not name encode under ``config``, so
+    the global-config path is exactly the degenerate empty plan —
+    bit-identical output, same code path.
     """
     config = EncodeConfig() if config is None else config
     be = _backends.resolve(backend)
@@ -470,19 +565,21 @@ def compile(spec: ModelSpec, config: EncodeConfig | None = None, *,
     layers: list = []
     for i, ls in enumerate(spec.layers):
         name = ls.name or f"layer{i}"
+        cfg = _plan_config(plan, name, config)
         if ls.kind == "conv":
             layers.append(_engine.CodrConv2D(
-                ls.weight, ls.bias, stride=ls.stride, t_m=config.t_m,
-                t_n=config.t_n, activation=ls.activation, name=name,
-                decode_source=config.decode_source,
-                n_unique=config.n_unique, rle_params=config.rle_params))
+                ls.weight, ls.bias, stride=ls.stride, t_m=cfg.t_m,
+                t_n=cfg.t_n, activation=ls.activation, name=name,
+                decode_source=cfg.decode_source,
+                n_unique=cfg.n_unique, rle_params=cfg.rle_params))
         else:
             layers.append(_engine.CodrLinear(
-                ls.weight, ls.bias, t_m=config.t_m_linear,
+                ls.weight, ls.bias, t_m=cfg.t_m_linear,
                 activation=ls.activation, name=name,
-                decode_source=config.decode_source,
-                n_unique=config.n_unique, rle_params=config.rle_params))
-    return CompiledModel(_engine.CodrModel(layers), spec, config, be)
+                decode_source=cfg.decode_source,
+                n_unique=cfg.n_unique, rle_params=cfg.rle_params))
+    return CompiledModel(_engine.CodrModel(layers), spec, config, be,
+                         plan=plan)
 
 
 # ---------------------------------------------------------------------------
@@ -530,6 +627,7 @@ class CompiledParams:
     quantized_paths: list         # quantize-applied but served dense
     config: EncodeConfig
     backend: str
+    plan: object = None           # per-leaf tune plan, or None
 
     def packed_leaves(self):
         """``(path_str, PackedLinear)`` pairs, flatten order."""
@@ -583,6 +681,7 @@ class CompiledParams:
 
 def compile_params(params, config: EncodeConfig | None = None, *,
                    backend: str | _backends.Backend = "codr_matmul",
+                   plan=None,
                    min_size: int | None = None,
                    include: Sequence[str] = PACK_INCLUDE,
                    exclude: Sequence[str] = (),
@@ -611,6 +710,12 @@ def compile_params(params, config: EncodeConfig | None = None, *,
     ``min_size`` defaults to ``serving.MIN_COMPRESS_SIZE``;
     ``sample_rows``/``accounting`` bound the per-tensor RLE accounting
     (the *packed bytes* are always measured in full).
+
+    ``plan`` — optional per-leaf encode configs keyed by the
+    '/'-joined pytree path (a :class:`repro.tune.TunePlan` or a plain
+    dict, same contract as :func:`compile`); each leaf packs or
+    quantizes under its own U budget, leaves the plan does not name use
+    ``config``.
     """
     from repro.core import serving as _serving
 
@@ -631,6 +736,7 @@ def compile_params(params, config: EncodeConfig | None = None, *,
         pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                         for k in path)
         arr = np.asarray(leaf)
+        cfg = _plan_config(plan, pstr, config)
         wanted = (any(tok in pstr for tok in include)
                   and not any(tok in pstr for tok in exclude))
         if arr.ndim < 2 or arr.size < min_size:
@@ -640,7 +746,7 @@ def compile_params(params, config: EncodeConfig | None = None, *,
             # quantize-applied, served dense (the codr_compress_params
             # lane) — embeddings, recurrent state inits, conv stacks
             mat = arr.reshape(-1, arr.shape[-1])
-            deq, _ = _serving._quantize_only(mat, config.n_unique)
+            deq, _ = _serving._quantize_only(mat, cfg.n_unique)
             new_leaves.append(jnp.asarray(deq.reshape(arr.shape),
                                           dtype=leaf.dtype))
             quantized_paths.append(pstr)
@@ -655,13 +761,13 @@ def compile_params(params, config: EncodeConfig | None = None, *,
                              f"compile_params packs linear projections "
                              f"only; conv leaf {pstr!r} must go through "
                              f"ModelSpec.from_params → compile")
-        pl = _pack_projection(arr, n_unique=config.n_unique,
+        pl = _pack_projection(arr, n_unique=cfg.n_unique,
                               backend=be.name)
         new_leaves.append(pl)
         packed_paths.append(pstr)
         if accounting:
             acc = _serving.account_tensor(arr.reshape(-1, arr.shape[-1]),
-                                          n_unique=config.n_unique,
+                                          n_unique=cfg.n_unique,
                                           sample_rows=sample_rows)
             acc["pack_bits"] = pl.hbm_bytes * 8  # measured, not estimated
             reports.append(_serving.TensorReport(
@@ -673,4 +779,4 @@ def compile_params(params, config: EncodeConfig | None = None, *,
             "conv/dense checkpoint pytrees use ModelSpec.from_params")
     return CompiledParams(jax.tree_util.tree_unflatten(treedef, new_leaves),
                           reports, packed_paths, quantized_paths, config,
-                          be.name)
+                          be.name, plan)

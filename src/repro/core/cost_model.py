@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.dataflow import AccessCounts
+from repro.core.dataflow import AccessCounts, ConvShape, TilingConfig, \
+    codr_accesses
 
 # --- 45 nm energy constants (pJ) -------------------------------------------
 DRAM_PJ_PER_BYTE = 160.0          # paper §V-A
@@ -56,6 +57,21 @@ def energy(acc: AccessCounts) -> EnergyBreakdown:
     xbar = acc.crossbar * XBAR_PJ
     return EnergyBreakdown(acc.name, dram * 1e-6, sram * 1e-6, rf * 1e-6,
                            alu * 1e-6, xbar * 1e-6)
+
+
+def layer_cost(shape: ConvShape, tiling: TilingConfig,
+               compressed_bits: float, n_unique: float,
+               n_nonzero: float) -> dict:
+    """One candidate point for the encoding tuner: SRAM access count and
+    energy under the CoDR dataflow for a layer encoded to
+    ``compressed_bits`` with the given tile geometry.  Returns a flat
+    dict (``sram``/``energy_uj`` plus the underlying breakdowns) so
+    :mod:`repro.tune` can rank candidates without re-deriving either."""
+    acc = codr_accesses(shape, tiling, compressed_bits, n_unique,
+                        n_nonzero)
+    e = energy(acc)
+    return {"sram": acc.total_sram, "energy_uj": e.total_uj,
+            "accesses": acc, "energy": e}
 
 
 def weight_sram_cost_ratio(bits_per_weight: float,

@@ -26,7 +26,7 @@ import math
 
 __all__ = ["ConvShape", "TilingConfig", "CODR_TILING", "UCNN_TILING",
            "SCNN_TILING", "AccessCounts", "codr_accesses", "ucnn_accesses",
-           "scnn_accesses"]
+           "scnn_accesses", "codr_tiling"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +83,20 @@ class TilingConfig:
 CODR_TILING = TilingConfig("CoDR", 8, 4, 4, 8, 8, 20, 20, 64)
 UCNN_TILING = TilingConfig("UCNN", 48, 1, 4, 1, 8, 1, 12, 8)
 SCNN_TILING = TilingConfig("SCNN", 21, 2, 1, 1, 1, 1, 1, 16)
+
+
+def codr_tiling(t_m: int | None = None, t_n: int | None = None, *,
+                base: TilingConfig = CODR_TILING) -> TilingConfig:
+    """A CoDR tiling with per-layer channel-tile overrides — the PU
+    count, spatial tiles, and SRAM row width are Table I hardware
+    parameters and stay fixed; ``t_m``/``t_n`` are the per-layer encode
+    knobs the tuner (:mod:`repro.tune`) sweeps."""
+    kw = {}
+    if t_m is not None:
+        kw["t_m"] = int(t_m)
+    if t_n is not None:
+        kw["t_n"] = int(t_n)
+    return dataclasses.replace(base, **kw) if kw else base
 
 
 @dataclasses.dataclass

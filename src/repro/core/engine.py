@@ -76,16 +76,25 @@ class LayerStats:
     density: float
     n_unique: int                  # sum of per-vector unique counts
     n_nonzero: int
+    n_unique_budget: int = 256     # the U budget the layer encoded under
+    t_m: int = 4                   # EFFECTIVE output tile (clamped to M —
+    t_n: int = 4                   # never the requested t_m_linear)
 
 
-def _layer_stats(name: str, kind: str, code: ucr.LayerCode) -> LayerStats:
+def _layer_stats(name: str, kind: str, code: ucr.LayerCode,
+                 n_unique_budget: int = 256) -> LayerStats:
     n_unique = sum(len(u.unique_vals) for u in code.ucr)
     n_nonzero = sum(u.n_nonzero for u in code.ucr)
+    # the effective tile, not the requested one: a linear layer with
+    # out-features < t_m_linear encodes (and costs) at M — reporting the
+    # request here would skew the cost-model comparison the tuner uses
     return LayerStats(
         name=name, kind=kind, shape=code.shape, n_weights=code.n_weights,
         encoded_bits=code.total_bits, bits_per_weight=code.bits_per_weight,
         density=n_nonzero / max(code.n_weights, 1),
-        n_unique=n_unique, n_nonzero=n_nonzero)
+        n_unique=n_unique, n_nonzero=n_nonzero,
+        n_unique_budget=n_unique_budget,
+        t_m=min(code.t_m, code.shape[0]), t_n=code.t_n)
 
 
 # ---------------------------------------------------------------------------
@@ -217,7 +226,8 @@ class CodrConv2D:
 
     # -- stats --------------------------------------------------------------
     def stats(self) -> LayerStats:
-        return _layer_stats(self.name, self.kind, self.code)
+        return _layer_stats(self.name, self.kind, self.code,
+                            n_unique_budget=self.n_unique)
 
     def out_hw(self, ri: int, ci: int) -> tuple[int, int]:
         rk, ck = self.code.shape[2], self.code.shape[3]
@@ -366,7 +376,8 @@ class CodrLinear:
             raise AssertionError(f"{self.name}: UCR+RLE roundtrip mismatch")
 
     def stats(self) -> LayerStats:
-        return _layer_stats(self.name, self.kind, self.code)
+        return _layer_stats(self.name, self.kind, self.code,
+                            n_unique_budget=self.n_unique)
 
     @property
     def trace_count(self) -> int:
@@ -499,11 +510,15 @@ class CodrModel:
         return self.total_bits() / max(n, 1)
 
     def sram_report(self, input_hw: tuple[int, int],
-                    cfg: dataflow.TilingConfig = CODR_TILING
+                    cfg: dataflow.TilingConfig = CODR_TILING,
+                    per_layer_tiling: bool = False
                     ) -> list[tuple[str, dataflow.AccessCounts]]:
         """Per-layer CoDR SRAM access estimates for one sample, tracking
         spatial dims through the conv stack (linear = 1×1 conv on a 1×1
-        feature map)."""
+        feature map).  ``per_layer_tiling`` counts each layer under its
+        own effective encode tile geometry (``LayerStats.t_m``/``t_n``)
+        instead of the global Table I tiling — the measured side of the
+        tuner's predicted-vs-measured comparison."""
         ri, ci = input_hw
         out = []
         for layer in self.layers:
@@ -514,8 +529,10 @@ class CodrModel:
             else:
                 m, n = layer.code.shape[0], layer.code.shape[1]
                 shape = ConvShape(m, n, 1, 1, 1, 1, 1)
+            tiling = dataflow.codr_tiling(st.t_m, st.t_n, base=cfg) \
+                if per_layer_tiling else cfg
             out.append((layer.name, dataflow.codr_accesses(
-                shape, cfg, float(layer.code.total_bits),
+                shape, tiling, float(layer.code.total_bits),
                 float(st.n_unique), float(st.n_nonzero))))
         return out
 

@@ -493,13 +493,23 @@ def layer_params_search(ucr_vectors, vector_len: int) -> tuple[int, int, int]:
     return dp, rp, ip
 
 
-def layer_bits_size_only(ucr_vectors, vector_len: int) -> int:
+def layer_bits_size_only(ucr_vectors, vector_len: int,
+                         params: tuple[int, int, int] | None = None) -> int:
     """Exact encoded size of a whole layer under shared per-layer params
-    (vectorized — concatenated streams decompose per element)."""
+    (vectorized — concatenated streams decompose per element).
+
+    ``params`` — optional fixed (delta, rep, index) bit-lengths; ``None``
+    runs :func:`layer_params_search` first.  Sizes here match
+    ``encode_conv_layer(...).total_bits`` bit for bit under the same
+    params — the tuner and the oracle tests both rely on that parity.
+    """
     if not ucr_vectors:
         return 3 * HEADER_BITS
     index_bits = max(1, math.ceil(math.log2(max(vector_len, 2))))
-    dp, rp, ip = layer_params_search(ucr_vectors, vector_len)
+    if params is None:
+        dp, rp, ip = layer_params_search(ucr_vectors, vector_len)
+    else:
+        dp, rp, ip = (int(p) for p in params)
     ip = min(ip, index_bits)
     all_deltas = np.concatenate(
         [delta_transform(u.unique_vals) for u in ucr_vectors])

@@ -152,7 +152,11 @@ def _quantize_only(mat: np.ndarray, n_unique: int):
     return ucr.dequantize_int8(q, scale), q
 
 
-def codr_report(reports: list[TensorReport]) -> str:
+def codr_report(reports: list[TensorReport], *,
+                per_tensor: bool = False) -> str:
+    """Aggregate compression report; ``per_tensor=True`` appends one row
+    per tensor (path, mean unique count, measured CoDR and pack
+    bits/weight) so per-leaf tune plans are inspectable at a glance."""
     tot_w = sum(r.n_weights for r in reports)
     tot_codr = sum(r.codr_bits for r in reports)
     tot_ucnn = sum(r.ucnn_bits for r in reports)
@@ -173,6 +177,15 @@ def codr_report(reports: list[TensorReport]) -> str:
             f"  pack : {tot_pack/tot_w:.2f} bits/weight fixed-width "
             f"unique-index pack (serving HBM traffic, "
             f"{16*tot_w/max(tot_pack,1):.1f}x vs bf16)")
+    if per_tensor:
+        lines.append(f"  {'tensor':<40} {'weights':>9} {'uniq':>6} "
+                     f"{'codr b/w':>9} {'pack b/w':>9}")
+        for r in reports:
+            pack = (f"{r.pack_bits_per_weight:9.2f}" if r.pack_bits
+                    else f"{'-':>9}")
+            lines.append(f"  {r.path:<40} {r.n_weights:>9} "
+                         f"{r.n_unique_mean:6.1f} "
+                         f"{r.codr_bits_per_weight:9.2f} {pack}")
     return "\n".join(lines)
 
 
