@@ -147,6 +147,7 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
     print(csv_line("engine_serve_transformer", st["ms_per_tok"] * 1e3,
                    f"arch={st['arch']};backend={st['backend']};"
                    f"hbm_bytes={st['hbm_bytes']};"
+                   f"kv_bytes={st['kv_bytes']};"
                    f"bits_per_weight={st['bits_per_weight']:.2f}"))
 
     # continuous batching over the same packed representation: one
@@ -176,6 +177,7 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
         return sum(len(h.result(timeout=600)) for h in hs)
     _wave(8)                                   # warm prefill + step jits
     conc_toks_s: dict[str, float] = {}
+    cb_kv_bytes = batcher.kv_bytes()
     for conc in (1, 4, 8):
         with Timer() as t_cb:
             n_toks = _wave(conc)
@@ -184,8 +186,40 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
                        t_cb.dt / n_toks * 1e6,
                        f"arch={cb_cfg.name};backend=codr_matmul;"
                        f"n_slots=8;tokens={n_toks};"
+                       f"kv_bytes={cb_kv_bytes};"
                        f"toks_per_s={conc_toks_s[str(conc)]:.1f}"))
     batcher.stop_async()
+    # int8 paged pool on the same geometry — resident KV bytes are the
+    # point of the quantized page pool, so record both side by side
+    # (no worker is started; this only materializes the pool)
+    cb_kv_bytes_int8 = ContinuousBatcher(
+        cb_compiled, cb_cfg, n_slots=8, max_len=cb_prompt_len + cb_gen,
+        kv_dtype="int8", kv_page_size=4).kv_bytes()
+    print(csv_line("engine_kv_pool_int8", 0.0,
+                   f"kv_bytes={cb_kv_bytes_int8};"
+                   f"kv_bytes_bf16={cb_kv_bytes};"
+                   f"ratio={cb_kv_bytes / max(cb_kv_bytes_int8, 1):.2f}"))
+
+    # packed checkpoint artifact: compress-once/boot-many — save the
+    # already-compiled transformer params and time the mmap reload
+    import os as _os
+    import shutil as _shutil
+    import tempfile as _tempfile
+    _ckdir = _tempfile.mkdtemp(prefix="codr_bench_")
+    _ckpath = _os.path.join(_ckdir, "packed.codr")
+    with Timer() as t_ck_save:
+        codr.save_packed(cb_compiled, _ckpath)
+    ck_disk_bytes = sum(
+        _os.path.getsize(_os.path.join(_ckpath, f))
+        for f in _os.listdir(_ckpath))
+    with Timer() as t_ck_load:
+        ck_loaded = codr.load_packed(_ckpath)
+    assert len(ck_loaded.packed_paths) == len(cb_compiled.packed_paths)
+    _shutil.rmtree(_ckdir)
+    print(csv_line("engine_packed_boot", t_ck_load.dt * 1e6,
+                   f"save_us={t_ck_save.dt * 1e6:.1f};"
+                   f"disk_bytes={ck_disk_bytes};"
+                   f"format_version={codr.CODR_FORMAT_VERSION}"))
 
     # latency under faults: the same async request path, clean vs with a
     # seeded fault plan (transient dispatch errors + injected latency)
@@ -259,6 +293,7 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
             "ms_per_tok": st["ms_per_tok"],
             "prefill_s": st["prefill_s"],
             "hbm_bytes": st["hbm_bytes"],
+            "kv_bytes": st["kv_bytes"],
             "dense_bf16_bytes": st["dense_bf16_bytes"],
             "bits_per_weight": st["bits_per_weight"],
             "n_packed_tensors": st["n_packed"],
@@ -267,6 +302,13 @@ def main(small: bool = False, batch: int = 8, iters: int = 5,
             "arch": cb_cfg.name, "backend": "codr_matmul",
             "n_slots": 8, "prompt_len": cb_prompt_len, "gen_len": cb_gen,
             "concurrency_tokens_per_s": conc_toks_s,
+            "kv_bytes": cb_kv_bytes,
+            "kv_bytes_int8_paged": cb_kv_bytes_int8,
+        },
+        "packed_boot": {
+            "save_s": t_ck_save.dt, "load_s": t_ck_load.dt,
+            "disk_bytes": ck_disk_bytes,
+            "format_version": codr.CODR_FORMAT_VERSION,
         },
         "serve_faults": {
             "requests": n_fault_req,

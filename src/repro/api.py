@@ -15,21 +15,34 @@ the backend registry (``launch/serve.py --codr`` rides this)::
                              backend="codr_matmul")
     logits, cache = api.prefill(cp.params, batch, cfg)   # decode-fused
 
-Everything here re-exports from :mod:`repro.core.api` (the pipeline) and
-:mod:`repro.core.backends` (the pluggable execution backends).
+Compile once, then persist the packed artifact and boot servers from
+it without re-encoding (``launch/serve.py --packed-ckpt``)::
+
+    codr.save_packed(cp, "ckpt/qwen.codr")        # bitstreams + manifest
+    cp = codr.load_packed("ckpt/qwen.codr")       # mmap'd, bit-identical
+
+Everything here re-exports from :mod:`repro.core.api` (the pipeline),
+:mod:`repro.core.backends` (the pluggable execution backends), and
+:mod:`repro.checkpoint.packed` (the packed artifact).
 """
+from repro.checkpoint.packed import (CODR_FORMAT_VERSION,  # noqa: F401
+                                     PackedCheckpointError, load_packed,
+                                     save_packed)
 from repro.core.api import (CompiledModel, CompiledParams,  # noqa: F401
                             EncodeConfig, LayerSpec, ModelSpec, compile,
                             compile_params)
 from repro.core.backends import (Backend, BackendCaps,  # noqa: F401
                                  available_backends, get_backend, register)
-from repro.core.codr_linear import (PackedLinear, PackedWeight,  # noqa: F401
-                                    dense_weight, pack_projection)
+from repro.core.codr_linear import (PackedEmbedding,  # noqa: F401
+                                    PackedLinear, PackedWeight, dense_weight,
+                                    pack_embedding, pack_projection)
 
 __all__ = [
     "LayerSpec", "ModelSpec", "EncodeConfig", "CompiledModel", "compile",
     "CompiledParams", "compile_params", "PackedLinear", "PackedWeight",
-    "dense_weight", "pack_projection",
+    "PackedEmbedding", "dense_weight", "pack_projection", "pack_embedding",
     "Backend", "BackendCaps", "available_backends", "get_backend",
     "register",
+    "CODR_FORMAT_VERSION", "PackedCheckpointError", "save_packed",
+    "load_packed",
 ]

@@ -1,3 +1,7 @@
 from repro.checkpoint.manager import CheckpointManager, restore_latest
+from repro.checkpoint.packed import (CODR_FORMAT_VERSION,
+                                     PackedCheckpointError, load_packed,
+                                     save_packed)
 
-__all__ = ["CheckpointManager", "restore_latest"]
+__all__ = ["CheckpointManager", "restore_latest", "CODR_FORMAT_VERSION",
+           "PackedCheckpointError", "load_packed", "save_packed"]

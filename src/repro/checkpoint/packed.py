@@ -1,0 +1,263 @@
+"""The packed checkpoint artifact: compress once offline, mmap at boot.
+
+``save_packed(compiled, path)`` serializes a
+:class:`repro.core.api.CompiledParams` — the packed bitstreams
+(``PackedWeight`` indices/tables/scales for every ``PackedLinear`` /
+``PackedEmbedding`` leaf), the remaining dense leaves, the
+:class:`~repro.core.api.EncodeConfig`, the per-tensor accounting
+reports, and the :class:`repro.tune.TunePlan` (when one drove the
+compile) — into one directory:
+
+* ``manifest.json`` — format version, config, tree skeleton (a
+  recursive dict/list/tuple/leaf encoding, so no ``treedef`` string
+  parsing), per-array dtype/shape, paths, plan, reports.
+* ``arr_N.npy`` — one file per array child, loadable with
+  ``np.load(mmap_mode="r")`` so boot maps the bitstreams instead of
+  copying them (bfloat16 is stored as a uint16 view and re-viewed on
+  load — ``.npy`` round-trips it as raw void bytes otherwise).
+
+Writes are atomic (CheckpointManager idiom): everything lands in
+``<path>.tmp``, the manifest is fsync'd, then one ``os.rename``
+publishes the artifact — a crash mid-save never leaves a readable but
+corrupt checkpoint.  ``load_packed`` is the exact inverse; loaded
+params produce **bit-identical** logits to the in-memory
+``compile_params`` result (the arrays round-trip byte-for-byte).
+
+``CODR_FORMAT_VERSION`` stamps every artifact; readers reject other
+versions with :class:`PackedCheckpointError`.  The golden-bitstream
+suite (``tests/test_golden_formats.py``) pins the byte layout — bump
+the version and regenerate via ``tools/regen_goldens.py`` when the
+format changes (docs/DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CODR_FORMAT_VERSION = 1
+_MAGIC = "codr-packed"
+
+
+class PackedCheckpointError(ValueError):
+    """A packed checkpoint is unreadable: missing/truncated files,
+    format-version mismatch, or on-disk bytes that contradict the
+    manifest (wrong dtype/shape)."""
+
+
+# ---------------------------------------------------------------------------
+# tree <-> manifest encoding
+# ---------------------------------------------------------------------------
+
+def _encode_tree(node, arrays: list):
+    """Recursively encode a params pytree into JSON nodes + an array
+    list.  Handles dict/list/tuple containers and PackedLinear /
+    PackedEmbedding / array leaves — the full vocabulary of a
+    ``CompiledParams.params`` tree."""
+    from repro.core.codr_linear import (PackedEmbedding, PackedLinear,
+                                        PackedWeight)
+
+    def ref(x):
+        arrays.append(np.asarray(x))
+        return len(arrays) - 1
+
+    def enc_pw(pw: PackedWeight) -> dict:
+        return {"packed": ref(pw.packed), "table": ref(pw.table),
+                "scale": ref(pw.scale), "bits": int(pw.bits),
+                "shape": [int(s) for s in pw.shape]}
+
+    if isinstance(node, PackedLinear):
+        return {"kind": "packed_linear", "weight": enc_pw(node.weight),
+                "out_features": int(node.out_features),
+                "backend": node.backend}
+    if isinstance(node, PackedEmbedding):
+        return {"kind": "packed_embedding", "weight": enc_pw(node.weight),
+                "d_model": int(node.d_model), "backend": node.backend}
+    if isinstance(node, dict):
+        return {"kind": "dict",
+                "items": {k: _encode_tree(v, arrays)
+                          for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {"kind": "list" if isinstance(node, list) else "tuple",
+                "items": [_encode_tree(v, arrays) for v in node]}
+    return {"kind": "array", "ref": ref(node)}
+
+
+def _decode_tree(node: dict, arrays: list):
+    from repro.core.codr_linear import (PackedEmbedding, PackedLinear,
+                                        PackedWeight)
+
+    def dec_pw(d: dict) -> PackedWeight:
+        return PackedWeight(packed=arrays[d["packed"]],
+                            table=arrays[d["table"]],
+                            scale=arrays[d["scale"]],
+                            bits=int(d["bits"]),
+                            shape=tuple(d["shape"]))
+
+    kind = node["kind"]
+    if kind == "packed_linear":
+        return PackedLinear(dec_pw(node["weight"]),
+                            out_features=int(node["out_features"]),
+                            backend=node["backend"])
+    if kind == "packed_embedding":
+        return PackedEmbedding(dec_pw(node["weight"]),
+                               d_model=int(node["d_model"]),
+                               backend=node["backend"])
+    if kind == "dict":
+        return {k: _decode_tree(v, arrays)
+                for k, v in node["items"].items()}
+    if kind == "list":
+        return [_decode_tree(v, arrays) for v in node["items"]]
+    if kind == "tuple":
+        return tuple(_decode_tree(v, arrays) for v in node["items"])
+    if kind == "array":
+        return arrays[node["ref"]]
+    raise PackedCheckpointError(f"unknown tree node kind {kind!r}")
+
+
+_BF16 = "bfloat16"
+
+
+def _array_meta(a: np.ndarray) -> dict:
+    return {"dtype": str(a.dtype), "shape": list(a.shape)}
+
+
+def _save_array(path: str, a: np.ndarray) -> None:
+    if str(a.dtype) == _BF16:
+        a = a.view(np.uint16)     # .npy cannot round-trip bfloat16
+    np.save(path, a)
+
+
+def _load_array(path: str, meta: dict, *, mmap: bool):
+    try:
+        a = np.load(path, mmap_mode="r" if mmap else None)
+    except Exception as e:
+        raise PackedCheckpointError(
+            f"packed checkpoint array {os.path.basename(path)} is "
+            f"unreadable (truncated or corrupt): {e}") from e
+    if meta["dtype"] == _BF16:
+        if a.dtype != np.uint16:
+            raise PackedCheckpointError(
+                f"{os.path.basename(path)}: expected uint16 storage for "
+                f"a bfloat16 array, found {a.dtype}")
+        a = a.view(np.dtype(jnp.bfloat16))
+    elif str(a.dtype) != meta["dtype"]:
+        raise PackedCheckpointError(
+            f"{os.path.basename(path)}: on-disk dtype {a.dtype} does not "
+            f"match the manifest's {meta['dtype']} — the artifact is "
+            f"corrupt or was written by an incompatible encoder")
+    if list(a.shape) != meta["shape"]:
+        raise PackedCheckpointError(
+            f"{os.path.basename(path)}: on-disk shape {list(a.shape)} "
+            f"does not match the manifest's {meta['shape']}")
+    return a
+
+
+# ---------------------------------------------------------------------------
+# save / load
+# ---------------------------------------------------------------------------
+
+def build_manifest(compiled) -> tuple[dict, list]:
+    """Pure encoding half of :func:`save_packed`: returns
+    ``(manifest, host_arrays)`` without touching the filesystem (the
+    golden-format tests pin these bytes directly)."""
+    arrays: list[np.ndarray] = []
+    tree = _encode_tree(compiled.params, arrays)
+    plan = getattr(compiled, "plan", None)
+    manifest = {
+        "magic": _MAGIC,
+        "format_version": CODR_FORMAT_VERSION,
+        "config": compiled.config.metadata(),
+        "backend": compiled.backend,
+        "packed_paths": list(compiled.packed_paths),
+        "quantized_paths": list(compiled.quantized_paths),
+        "embed_paths": list(getattr(compiled, "embed_paths", [])),
+        "reports": [dataclasses.asdict(r) for r in compiled.reports],
+        "plan": plan.to_json() if plan is not None else None,
+        "tree": tree,
+        "arrays": [_array_meta(a) for a in arrays],
+    }
+    return manifest, arrays
+
+
+def save_packed(compiled, path: str) -> str:
+    """Write ``compiled`` (a :class:`repro.core.api.CompiledParams`) as
+    a packed checkpoint directory at ``path``.  Atomic: a crash leaves
+    either the previous artifact or none.  Returns ``path``."""
+    manifest, arrays = build_manifest(compiled)
+    tmp = str(path) + ".tmp"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    for i, a in enumerate(arrays):
+        _save_array(os.path.join(tmp, f"arr_{i}.npy"), a)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    shutil.rmtree(str(path), ignore_errors=True)
+    os.rename(tmp, str(path))
+    return str(path)
+
+
+def load_packed(path: str, *, mmap: bool = True):
+    """Load a packed checkpoint back into a
+    :class:`repro.core.api.CompiledParams` — bit-identical to the
+    object :func:`save_packed` was given (same packed bytes, same
+    logits).  ``mmap=True`` maps the array files instead of copying;
+    JAX copies pages to device lazily on first dispatch."""
+    from repro.core.api import CompiledParams, EncodeConfig
+    from repro.core.serving import TensorReport
+
+    mpath = os.path.join(str(path), "manifest.json")
+    if not os.path.isdir(str(path)) or not os.path.exists(mpath):
+        raise PackedCheckpointError(
+            f"{path!r} is not a packed checkpoint (no manifest.json) — "
+            f"write one with codr.save_packed(compiled, path)")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise PackedCheckpointError(
+            f"{path!r}: manifest.json is not valid JSON (truncated "
+            f"write?): {e}") from e
+    if manifest.get("magic") != _MAGIC:
+        raise PackedCheckpointError(
+            f"{path!r}: bad magic {manifest.get('magic')!r} — not a "
+            f"codr packed checkpoint")
+    ver = manifest.get("format_version")
+    if ver != CODR_FORMAT_VERSION:
+        raise PackedCheckpointError(
+            f"{path!r}: format version {ver} but this build reads "
+            f"version {CODR_FORMAT_VERSION} — re-encode the checkpoint "
+            f"with codr.save_packed (see CODR_FORMAT_VERSION in "
+            f"repro/checkpoint/packed.py)")
+    arrays = []
+    for i, meta in enumerate(manifest["arrays"]):
+        apath = os.path.join(str(path), f"arr_{i}.npy")
+        if not os.path.exists(apath):
+            raise PackedCheckpointError(
+                f"{path!r}: missing array file arr_{i}.npy (the "
+                f"manifest lists {len(manifest['arrays'])} arrays)")
+        arrays.append(_load_array(apath, meta, mmap=mmap))
+    params = _decode_tree(manifest["tree"], arrays)
+    plan = None
+    if manifest.get("plan") is not None:
+        from repro.tune.plan import TunePlan
+        plan = TunePlan.from_json(manifest["plan"])
+    cfg_d = dict(manifest["config"])
+    if cfg_d.get("rle_params") is not None:
+        cfg_d["rle_params"] = tuple(cfg_d["rle_params"])
+    return CompiledParams(
+        params=params,
+        reports=[TensorReport(**r) for r in manifest["reports"]],
+        packed_paths=list(manifest["packed_paths"]),
+        quantized_paths=list(manifest["quantized_paths"]),
+        config=EncodeConfig(**cfg_d),
+        backend=manifest["backend"],
+        plan=plan,
+        embed_paths=list(manifest.get("embed_paths", [])))

@@ -48,7 +48,9 @@ import numpy as np
 
 from repro.core import backends as _backends
 from repro.core import engine as _engine
+from repro.core.codr_linear import PackedEmbedding as _PackedEmbedding
 from repro.core.codr_linear import PackedLinear as _PackedLinear
+from repro.core.codr_linear import pack_embedding as _pack_embedding
 from repro.core.codr_linear import pack_projection as _pack_projection
 
 __all__ = [
@@ -592,6 +594,7 @@ def compile(spec: ModelSpec, config: EncodeConfig | None = None, *,
 #: execute as gathers (`jnp.take`), not matmuls, so they stay dense —
 #: quantize-applied like every other large leaf, just not packed.
 PACK_INCLUDE = ("proj", "router", "w_experts")
+EMBED_INCLUDE = ("embed",)        # (V, d) leaves packed for row-gather
 
 
 class _ConvLeafShim:
@@ -628,14 +631,17 @@ class CompiledParams:
     config: EncodeConfig
     backend: str
     plan: object = None           # per-leaf tune plan, or None
+    embed_paths: list = dataclasses.field(default_factory=list)
 
     def packed_leaves(self):
-        """``(path_str, PackedLinear)`` pairs, flatten order."""
+        """``(path_str, PackedLinear | PackedEmbedding)`` pairs,
+        flatten order."""
+        packed = (_PackedLinear, _PackedEmbedding)
         flat, _ = jax.tree_util.tree_flatten_with_path(
-            self.params, is_leaf=lambda l: isinstance(l, _PackedLinear))
+            self.params, is_leaf=lambda l: isinstance(l, packed))
         return [("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                           for k in path), leaf)
-                for path, leaf in flat if isinstance(leaf, _PackedLinear)]
+                for path, leaf in flat if isinstance(leaf, packed)]
 
     # -- measured accounting ------------------------------------------------
     def hbm_bytes(self) -> int:
@@ -663,7 +669,8 @@ class CompiledParams:
             from repro.core.serving import codr_report
             lines.append(codr_report(self.reports))
         lines.append(
-            f"packed {len(self.packed_paths)} projection tensors "
+            f"packed {len(self.packed_paths)} projection tensors + "
+            f"{len(self.embed_paths)} embedding tables "
             f"({self.n_packed_weights() / 1e6:.2f}M weights) for backend "
             f"{self.backend!r}: {self.hbm_bytes() / 1e6:.3f} MB HBM "
             f"measured ({self.bits_per_weight():.2f} bits/weight, "
@@ -685,6 +692,7 @@ def compile_params(params, config: EncodeConfig | None = None, *,
                    min_size: int | None = None,
                    include: Sequence[str] = PACK_INCLUDE,
                    exclude: Sequence[str] = (),
+                   pack_embeddings: bool = True,
                    sample_rows: int | None = 4096,
                    accounting: bool = True) -> CompiledParams:
     """Offline-encode a ``repro.models`` params pytree for serving from
@@ -694,11 +702,15 @@ def compile_params(params, config: EncodeConfig | None = None, *,
     Every projection leaf (path matches ``include`` and not ``exclude``,
     ``ndim >= 2``, ``size >= min_size``) is quantized under the
     ``config`` U budget and converted to packed bitstream form
-    (:class:`~repro.core.codr_linear.PackedLinear`); every *other* large
-    leaf gets the quantization applied in place (embeddings and other
-    gather-consumed tensors serve dense), exactly as
-    ``serving.codr_compress_params`` would — so decode-fused and
-    quantize-applied serving see bit-identical weights.  Leading stack
+    (:class:`~repro.core.codr_linear.PackedLinear`); 2-D leaves matching
+    ``EMBED_INCLUDE`` become row-gatherable
+    :class:`~repro.core.codr_linear.PackedEmbedding` tables (packed
+    lookups are bit-identical to indexing the quantize-applied dense
+    table — disable with ``pack_embeddings=False``); every *other*
+    large leaf gets the quantization applied in place (gather-consumed
+    tensors serve dense), exactly as ``serving.codr_compress_params``
+    would — so decode-fused and quantize-applied serving see
+    bit-identical weights.  Leading stack
     dims (scanned layer stacks, expert stacks) pack per-matrix under one
     shared quantization, so ``lax.scan`` slices packs like any other
     stacked leaf.
@@ -731,7 +743,7 @@ def compile_params(params, config: EncodeConfig | None = None, *,
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     new_leaves, reports = [], []
-    packed_paths, quantized_paths = [], []
+    packed_paths, quantized_paths, embed_paths = [], [], []
     for path, leaf in flat:
         pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                         for k in path)
@@ -742,9 +754,24 @@ def compile_params(params, config: EncodeConfig | None = None, *,
         if arr.ndim < 2 or arr.size < min_size:
             new_leaves.append(leaf)
             continue
+        if (pack_embeddings and arr.ndim == 2
+                and any(tok in pstr for tok in EMBED_INCLUDE)
+                and not any(tok in pstr for tok in exclude)):
+            pe = _pack_embedding(arr, n_unique=cfg.n_unique,
+                                 backend=be.name)
+            new_leaves.append(pe)
+            embed_paths.append(pstr)
+            if accounting:
+                acc = _serving.account_tensor(arr, n_unique=cfg.n_unique,
+                                              sample_rows=sample_rows)
+                acc["pack_bits"] = pe.hbm_bytes * 8
+                reports.append(_serving.TensorReport(
+                    path=pstr, n_weights=arr.size, **acc))
+            continue
         if not wanted:
             # quantize-applied, served dense (the codr_compress_params
-            # lane) — embeddings, recurrent state inits, conv stacks
+            # lane) — recurrent state inits, conv stacks, and
+            # embeddings when pack_embeddings is off
             mat = arr.reshape(-1, arr.shape[-1])
             deq, _ = _serving._quantize_only(mat, cfg.n_unique)
             new_leaves.append(jnp.asarray(deq.reshape(arr.shape),
@@ -779,4 +806,4 @@ def compile_params(params, config: EncodeConfig | None = None, *,
             "conv/dense checkpoint pytrees use ModelSpec.from_params")
     return CompiledParams(jax.tree_util.tree_unflatten(treedef, new_leaves),
                           reports, packed_paths, quantized_paths, config,
-                          be.name, plan)
+                          be.name, plan, embed_paths=embed_paths)

@@ -252,6 +252,23 @@ class Backend(abc.ABC):
         gates on that flag."""
         return jnp.dot(x, w.dense().astype(x.dtype))
 
+    def gather(self, tokens: jax.Array, w) -> jax.Array:
+        """Embedding lookup on a packed vocabulary table
+        (:class:`repro.core.codr_linear.PackedEmbedding`): gather the
+        packed rows for ``tokens`` and decode only those.  The default
+        row-gather decode is bit-for-bit equal to indexing the
+        quantize-applied dense table, so every backend inherits exact
+        parity with the dense reference lane; ``models.common.
+        embedding_lookup`` routes packed embed leaves here."""
+        return w.lookup(tokens)
+
+    def unembed(self, x: jax.Array, w) -> jax.Array:
+        """Logit projection ``x @ dense(w).T`` against a packed output
+        embedding — decode-then-matmul with the dense ``unembed``
+        numerics (dequantized f32 table cast to ``x.dtype``), bit-equal
+        to serving the quantize-applied dense table."""
+        return jnp.dot(x, w.dense().T.astype(x.dtype))
+
     def run_model(self, model, batch: jax.Array) -> jax.Array:
         """Forward a batch through a :class:`~repro.core.engine.CodrModel`
         (or any object exposing ``_chain``): casts to float32, chains

@@ -159,11 +159,18 @@ class ContinuousBatcher(AsyncWorkerLoop):
     def __init__(self, params, cfg, *, n_slots: int = 4, max_len: int = 128,
                  eos_id: int | None = None, prefill_per_step: int = 1,
                  join_deadline_s: float = 0.0, record_logits: bool = False,
-                 max_pending: int | None = None):
+                 max_pending: int | None = None,
+                 kv_dtype: str = "bf16", kv_page_size: int | None = None,
+                 kv_pages: int | None = None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if max_len < 2:
             raise ValueError("max_len must be >= 2")
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8', "
+                             f"got {kv_dtype!r}")
+        if kv_dtype == "int8" and kv_page_size is None:
+            kv_page_size = 16            # int8 storage is always paged
         if max_pending is not None and max_pending < 1:
             raise ValueError("max_pending must be >= 1 (or None)")
         if cfg.family == "encdec" or cfg.frontend:
@@ -184,21 +191,45 @@ class ContinuousBatcher(AsyncWorkerLoop):
         # CompiledParams duck-typing: serve from its packed pytree
         self._params = getattr(params, "params", params)
         self._api = get_model(cfg)
-        # slot axis per cache leaf, discovered structurally (stacked
-        # scan-carry leaves lead with n_periods, prologue leaves with
-        # batch) — no arrays materialized
-        self._axes = cache_mod.diff_axes(
-            jax.eval_shape(lambda: self._api.init_cache(cfg, 1, max_len)),
-            jax.eval_shape(lambda: self._api.init_cache(cfg, 2, max_len)))
+        self._cache_mod = cache_mod
         self._prefill_fn = jax.jit(
             lambda p, t: self._api.prefill(p, {"tokens": t}, cfg))
         self._step_fn = jax.jit(
             lambda p, pool, tok, pos: self._api.decode_step(
                 p, pool, tok, pos, cfg))
-        self._write_fn = jax.jit(
-            lambda pool, c, slot: cache_mod.write_slot(
-                pool, c, slot, self._axes))
-        self._pool = self._api.init_cache(cfg, n_slots, max_len)
+        if kv_page_size is not None:
+            # paged KV: pool of fixed-size pages + per-slot page tables
+            # (docs/DESIGN.md §2.2).  The page table lives host-side
+            # (self._kv_table) — admission allocates, retirement frees
+            # by repointing rows at the scratch page — and is pushed
+            # into the device pool before every decode step.
+            self._paged = cache_mod.PagedSpec(
+                page_size=kv_page_size, max_len=max_len, n_slots=n_slots,
+                kv_dtype=kv_dtype, n_pages=kv_pages)
+            self._paged.total_pages     # validate geometry up front
+            self._page_pool = cache_mod.PagePool(self._paged)
+            self._slot_pages: list[list[int] | None] = [None] * n_slots
+            self._kv_table = np.zeros((n_slots, self._paged.max_pages),
+                                      np.int32)
+            self._write_fn = jax.jit(
+                lambda pool, c, slot, pages: cache_mod.write_slot_paged(
+                    pool, c, slot, pages))
+            self._pool = self._api.init_cache(cfg, n_slots, max_len,
+                                              paged=self._paged)
+        else:
+            self._paged = None
+            # slot axis per cache leaf, discovered structurally (stacked
+            # scan-carry leaves lead with n_periods, prologue leaves
+            # with batch) — no arrays materialized
+            self._axes = cache_mod.diff_axes(
+                jax.eval_shape(lambda: self._api.init_cache(cfg, 1,
+                                                            max_len)),
+                jax.eval_shape(lambda: self._api.init_cache(cfg, 2,
+                                                            max_len)))
+            self._write_fn = jax.jit(
+                lambda pool, c, slot: cache_mod.write_slot(
+                    pool, c, slot, self._axes))
+            self._pool = self._api.init_cache(cfg, n_slots, max_len)
         self._slots: list[_Slot | None] = [None] * n_slots
         self._pending: list[_Pending] = []
         self._next_id = 0
@@ -283,6 +314,35 @@ class ContinuousBatcher(AsyncWorkerLoop):
         with self._cv:
             return len(self._pending)
 
+    def kv_bytes(self) -> int:
+        """Measured bytes of the KV pool as stored — page data + scales
+        + tables (paged) or the contiguous slot buffers (dense).  The
+        cache-side counterpart of ``CompiledParams.hbm_bytes()``."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self._pool))
+
+    # -- paged-KV bookkeeping (all under self._cv) ---------------------------
+    def _pages_ok_locked(self) -> bool:
+        """Can the head pending request reserve its full page budget?"""
+        if self._paged is None or not self._pending:
+            return True
+        req = self._pending[0]
+        need = self._paged.pages_for(req.prompt.size + req.max_new_tokens)
+        return self._page_pool.available >= need
+
+    def _release_pages_locked(self, slot_idx: int) -> None:
+        """Free a retired/failed slot's pages and repoint its page-table
+        row at the scratch page, so the pooled decode step's dead write
+        for this now-inactive slot cannot land in a page that a new
+        request may already own."""
+        if self._paged is None:
+            return
+        pages = self._slot_pages[slot_idx]
+        if pages:
+            self._page_pool.free(pages)
+        self._slot_pages[slot_idx] = None
+        self._kv_table[slot_idx, :] = self._cache_mod.SCRATCH_PAGE
+
     # -- AsyncWorkerLoop hooks ----------------------------------------------
     def _cancel_pending_locked(self) -> None:
         self._abort_active = True
@@ -301,6 +361,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
         for i, s in enumerate(self._slots):
             if s is not None:
                 self._slots[i] = None
+                self._release_pages_locked(i)
                 if not s.handle.done():
                     s.handle._fail(exc)
 
@@ -325,7 +386,8 @@ class ContinuousBatcher(AsyncWorkerLoop):
                 while not self._stopping:
                     has_free = any(s is None for s in self._slots)
                     n_active = sum(s is not None for s in self._slots)
-                    if self._pending and has_free:
+                    if (self._pending and has_free
+                            and self._pages_ok_locked()):
                         break                       # admission work
                     if n_active:
                         # join deadline: a partially-filled pool lingers
@@ -348,6 +410,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
                                 s.handle._fail(futures.CancelledError(),
                                                reason="cancelled")
                                 self._slots[i] = None
+                                self._release_pages_locked(i)
                         return
                     if (not self._pending
                             and not any(s is not None for s in self._slots)):
@@ -358,6 +421,8 @@ class ContinuousBatcher(AsyncWorkerLoop):
                             if s is None]
                     if not free or not self._pending:
                         break
+                    if not self._pages_ok_locked():
+                        break      # head request waits for page frees
                     req = self._pending.pop(0)
                     if (req.deadline is not None
                             and time.monotonic() >= req.deadline):
@@ -370,8 +435,21 @@ class ContinuousBatcher(AsyncWorkerLoop):
                             "deadline expired before admission"),
                             reason="deadline")
                         continue
-                    # reserve the slot under the lock; prefill happens
-                    # outside it
+                    # reserve the slot (and, paged, its whole page
+                    # budget — all-or-nothing, so a request can never
+                    # run out of pages mid-stream) under the lock;
+                    # prefill happens outside it
+                    if self._paged is not None:
+                        need = self._paged.pages_for(
+                            req.prompt.size + req.max_new_tokens)
+                        pages = self._page_pool.alloc(need)
+                        assert pages is not None  # _pages_ok_locked held
+                        self._slot_pages[free[0]] = pages
+                        row = np.full((self._paged.max_pages,),
+                                      self._cache_mod.SCRATCH_PAGE,
+                                      np.int32)
+                        row[:need] = pages
+                        self._kv_table[free[0]] = row
                     self._slots[free[0]] = _Slot(
                         req.handle, req.eos_id, last_tok=-1,
                         pos=-1, n_gen=0, deadline=req.deadline)
@@ -391,8 +469,13 @@ class ContinuousBatcher(AsyncWorkerLoop):
             self._fire("batcher.prefill")
             logits, cache = self._prefill_fn(
                 self._params, jnp.asarray(req.prompt[None, :]))
-            self._pool = self._write_fn(self._pool, cache,
-                                        jnp.int32(slot_idx))
+            if self._paged is not None:
+                self._pool = self._write_fn(
+                    self._pool, cache, jnp.int32(slot_idx),
+                    jnp.asarray(self._kv_table[slot_idx]))
+            else:
+                self._pool = self._write_fn(self._pool, cache,
+                                            jnp.int32(slot_idx))
             return np.asarray(logits, np.float32).reshape(-1)
 
         try:
@@ -400,6 +483,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
         except Exception as e:      # noqa: BLE001 — lands on the handle
             with self._cv:
                 self._slots[slot_idx] = None
+                self._release_pages_locked(slot_idx)
             req.handle._fail(e)
             return
         tok = int(np.argmax(row))
@@ -425,6 +509,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
                        and time.monotonic() >= s.deadline]
             for i, s in expired:
                 self._slots[i] = None
+                self._release_pages_locked(i)
                 self.requests_finished += 1
                 self.requests_expired += 1
             if expired:
@@ -436,6 +521,8 @@ class ContinuousBatcher(AsyncWorkerLoop):
                 self._cv.notify_all()
             active = [(i, s) for i, s in enumerate(self._slots)
                       if s is not None]
+            kv_table = (self._kv_table.copy() if self._paged is not None
+                        else None)
         if not active:
             return
         toks = np.zeros((self.n_slots,), np.int32)
@@ -443,6 +530,11 @@ class ContinuousBatcher(AsyncWorkerLoop):
         for i, s in active:
             toks[i] = s.last_tok
             poss[i] = s.pos
+        if kv_table is not None:
+            # push the authoritative host page table into the device
+            # pool: retired slots now point at scratch, fresh admits at
+            # their reserved pages
+            self._pool = self._cache_mod.set_tables(self._pool, kv_table)
 
         def _attempt():
             # retry-safe: self._pool is only replaced on success, so a
@@ -461,6 +553,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
             with self._cv:
                 for i, s in active:
                     self._slots[i] = None
+                    self._release_pages_locked(i)
                     self.requests_finished += 1
                 for _, s in active:
                     s.handle._fail(e)
@@ -492,6 +585,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
             if reason is None:
                 return
             self._slots[slot_idx] = None        # slot → FREE
+            self._release_pages_locked(slot_idx)
             self.requests_finished += 1
             self._cv.notify_all()
         s.handle._finish(reason)
@@ -510,10 +604,23 @@ class ContinuousBatcher(AsyncWorkerLoop):
         if prompt.size + max_new_tokens > self.max_len:
             raise ValueError("prompt + max_new_tokens exceeds max_len")
         eos = self.eos_id if eos_id is None else eos_id
-        pool = self._api.init_cache(self.cfg, self.n_slots, self.max_len)
+        pool = self._api.init_cache(self.cfg, self.n_slots, self.max_len,
+                                    paged=self._paged)
         logits, cache = self._prefill_fn(self._params,
                                          jnp.asarray(prompt[None, :]))
-        pool = self._write_fn(pool, cache, jnp.int32(0))
+        if self._paged is not None:
+            # deterministic solo allocation: the first pages after
+            # scratch.  Physical page ids never enter the math (pages
+            # are slot-private, scales per-page), so the pooled run is
+            # bit-identical whatever ids its allocator happened to pick.
+            need = self._paged.pages_for(prompt.size + max_new_tokens)
+            row = np.full((self._paged.max_pages,),
+                          self._cache_mod.SCRATCH_PAGE, np.int32)
+            row[:need] = np.arange(1, need + 1)
+            pool = self._write_fn(pool, cache, jnp.int32(0),
+                                  jnp.asarray(row))
+        else:
+            pool = self._write_fn(pool, cache, jnp.int32(0))
         row = np.asarray(logits, np.float32).reshape(-1)
         toks: list[int] = []
         rows: list[np.ndarray] = []
@@ -534,3 +641,50 @@ class ContinuousBatcher(AsyncWorkerLoop):
             if record_logits:
                 rows.append(r.copy())
         return toks, rows
+
+    def replay_logits(self, prompt, tokens) -> np.ndarray:
+        """Teacher-forced replay: run ``prompt`` then feed the given
+        ``tokens`` verbatim (no argmax feedback), returning the
+        ``(len(tokens), vocab)`` float32 logits the pipeline produced
+        at each step.
+
+        This is the differential-check primitive for lossy KV modes:
+        free-running int8 greedy decode legitimately diverges from the
+        dense reference after a few near-tied steps, but the *per-step*
+        logits under the same forced token stream must stay within the
+        int8 quantization floor of the dense run — so ``--check`` and
+        the tier-1 differential tests compare ``replay_logits`` rows
+        instead of token strings.  Row 0 is the prefill logits row
+        (dense compute, paged caches untouched), so it is bit-exact
+        across KV modes by construction."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        tokens = [int(t) for t in tokens]
+        if not tokens:
+            return np.zeros((0, self.cfg.vocab_size), np.float32)
+        if prompt.size + len(tokens) > self.max_len:
+            raise ValueError("prompt + replay tokens exceed max_len")
+        pool = self._api.init_cache(self.cfg, self.n_slots, self.max_len,
+                                    paged=self._paged)
+        logits, cache = self._prefill_fn(self._params,
+                                         jnp.asarray(prompt[None, :]))
+        if self._paged is not None:
+            need = self._paged.pages_for(prompt.size + len(tokens))
+            row = np.full((self._paged.max_pages,),
+                          self._cache_mod.SCRATCH_PAGE, np.int32)
+            row[:need] = np.arange(1, need + 1)
+            pool = self._write_fn(pool, cache, jnp.int32(0),
+                                  jnp.asarray(row))
+        else:
+            pool = self._write_fn(pool, cache, jnp.int32(0))
+        rows = [np.asarray(logits, np.float32).reshape(-1)]
+        pos = int(prompt.size)
+        for tok in tokens[:-1]:
+            tvec = np.zeros((self.n_slots,), np.int32)
+            pvec = np.zeros((self.n_slots,), np.int32)
+            tvec[0], pvec[0] = tok, pos
+            logits, pool = self._step_fn(self._params, pool,
+                                         jnp.asarray(tvec),
+                                         jnp.asarray(pvec))
+            rows.append(np.asarray(logits, np.float32)[0].copy())
+            pos += 1
+        return np.stack(rows) if rows else np.zeros((0, 0), np.float32)

@@ -30,8 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PackedWeight", "PackedLinear", "pack_unique", "pack_projection",
-           "unpack_unique", "dense_weight", "codr_matmul_ref", "choose_bits"]
+__all__ = ["PackedWeight", "PackedLinear", "PackedEmbedding", "pack_unique",
+           "pack_projection", "pack_embedding", "unpack_unique",
+           "dense_weight", "codr_matmul_ref", "choose_bits"]
 
 
 @dataclasses.dataclass
@@ -262,3 +263,83 @@ def pack_projection(w: np.ndarray, *, n_unique: int = 16,
         scale=jnp.asarray(scale_arr),
         bits=bits, shape=(k, n + pad))
     return PackedLinear(pw, out_features=n, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# packed embedding leaves — row-gatherable vocabulary tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedEmbedding:
+    """A ``(V, d)`` embedding table in packed bitstream form.
+
+    Same fixed-width unique-index pack as :class:`PackedLinear`, but
+    the access pattern is a *row gather* by token id rather than a
+    matmul: the pack keeps the vocab axis leading, so a lookup touches
+    only ``d * bits / 8`` bytes per token instead of the dense row.
+    ``models.common.embedding_lookup`` / ``unembed`` intercept these
+    leaves and resolve through ``repro.core.backends`` (``gather`` /
+    ``unembed``), mirroring how ``linear`` treats :class:`PackedLinear`
+    (docs/DESIGN.md §2.2).
+    """
+
+    weight: PackedWeight
+    d_model: int                 # logical row width (pack pads to a word)
+    backend: str = "codr_matmul"
+
+    @property
+    def vocab_size(self) -> int:
+        return self.weight.shape[0]
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.weight.hbm_bytes
+
+    @property
+    def n_weights(self) -> int:
+        return self.weight.shape[0] * self.d_model
+
+    def lookup(self, tokens: jax.Array) -> jax.Array:
+        """Gather + decode rows for ``tokens`` (any int shape), f32.
+
+        Bit-for-bit equal to indexing the quantize-applied dense table:
+        the gathered packed words are unpacked with the same shift/mask
+        arithmetic as ``unpack_unique`` and dequantized through the same
+        f32 ``table-value * scale`` product."""
+        pw = self.weight
+        rows = jnp.take(pw.packed, tokens, axis=0)       # (..., words)
+        per_word = 32 // pw.bits
+        shifts = jnp.arange(per_word, dtype=jnp.uint32) * pw.bits
+        mask = jnp.uint32((1 << pw.bits) - 1)
+        idx = (rows[..., None] >> shifts) & mask
+        idx = idx.reshape(tuple(tokens.shape) + (pw.shape[1],))
+        vals = jnp.take(pw.table, idx.astype(jnp.int32), axis=0)
+        return vals[..., : self.d_model] * pw.scale
+
+    def dense(self) -> jax.Array:
+        """Decode the whole table to its dequantized ``(V, d)`` f32
+        form (the unembed logit projection consumes this)."""
+        pw = self.weight
+        dec = unpack_unique(pw.packed, pw.table, bits=pw.bits,
+                            n=pw.shape[1])
+        return dec[:, : self.d_model] * pw.scale
+
+
+jax.tree_util.register_pytree_node(
+    PackedEmbedding,
+    lambda w: ((w.weight,), (w.d_model, w.backend)),
+    lambda aux, ch: PackedEmbedding(ch[0], aux[0], aux[1]))
+
+
+def pack_embedding(w: np.ndarray, *, n_unique: int = 16,
+                   backend: str = "codr_matmul") -> PackedEmbedding:
+    """Offline-encode one ``(V, d)`` embedding leaf into row-gatherable
+    packed form.  Quantization is identical to :func:`pack_projection`
+    (single-tensor ``quantize_int8`` + U restriction), so packed-gather
+    lookups match the quantize-applied dense table bit-for-bit."""
+    w = np.asarray(w, dtype=np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"pack_embedding needs a (V, d) table, "
+                         f"got shape {w.shape}")
+    pl = pack_projection(w, n_unique=n_unique, backend=backend)
+    return PackedEmbedding(pl.weight, d_model=w.shape[1], backend=backend)

@@ -8,6 +8,16 @@ resolves through the backend registry into the decode-fused
 model serves *from* the compressed weights, not from a dense copy that
 merely had quantization applied — and the reported weight HBM bytes are
 measured on the stored pack rather than estimated.
+
+``--packed-ckpt [PATH]`` boots from a packed checkpoint artifact
+(``repro.api.save_packed``): if PATH exists it is mmap-loaded (no
+re-encode); otherwise the run compiles once, saves the artifact, and
+reloads it — so the flag is self-contained in CI.  Packed boots default
+to the quantized **paged** KV cache (``--kv-dtype int8``); ``--kv-dtype
+bf16`` with ``--kv-page-size`` gives the bit-identical paged escape
+hatch, and ``--check`` verifies each mode against the dense-cache
+sequential reference (token-exact for bf16, teacher-forced logit bound
+for int8 — docs/DESIGN.md §2.2).
 """
 from __future__ import annotations
 
@@ -105,6 +115,8 @@ def run_serve(*, arch: str = "qwen2.5-3b", batch: int = 4,
     # through decode, so dividing by generated tokens alone would
     # overstate the per-token cost
     ms_per_tok = t_decode / max(n_steps, 1) * 1e3
+    kv_bytes = sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(cache))
     if verbose:
         print(f"prefill {prompt_len} toks: {t_prefill*1e3:.1f} ms; "
               f"decode {n_steps} steps ({len(out_tokens)} generated): "
@@ -118,6 +130,7 @@ def run_serve(*, arch: str = "qwen2.5-3b", batch: int = 4,
         "n_decode_steps": n_steps,
         "ms_per_tok": ms_per_tok,
         "cache_self_len": cache_self_len,
+        "kv_bytes": kv_bytes,
     }
     if compiled is not None:
         # measured on the stored packed representation, not estimated
@@ -154,12 +167,23 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
                          codr_backend: str = "codr_matmul",
                          check: bool = False, seed: int = 0,
                          chaos_seed: int | None = None,
+                         kv_dtype: str | None = None,
+                         kv_page_size: int | None = None,
+                         packed_ckpt: str | None = None,
                          verbose: bool = True) -> dict:
     """Continuous-batching serving run: ``n_requests`` mixed-length
     prompts streamed through a :class:`repro.core.batching
     .ContinuousBatcher` slot pool.  With ``check=True`` every streamed
     output is asserted bit-identical to the sequential solo-decode
-    reference on the same params (the CI smoke contract).
+    reference on the same params (the CI smoke contract); lossy KV
+    modes (``kv_dtype="int8"``) additionally replay the dense-cache
+    reference's tokens teacher-forced through the paged pipeline and
+    bound the per-step logit deviation.
+
+    ``packed_ckpt`` boots the weights from a packed checkpoint
+    artifact (saving one first if the path does not exist) and — unless
+    overridden — turns on the quantized paged KV cache, so one flag
+    exercises the full "compress offline, serve packed" path.
 
     ``chaos_seed`` arms a deterministic fault plan
     (:meth:`repro.runtime.resilience.FaultPlan.seeded` over the
@@ -173,16 +197,48 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
     cfg = smoke_variant(get_config(arch))
     api = get_model(cfg)
     key = jax.random.PRNGKey(seed)
-    params = api.init_params(key, cfg)
+
+    if kv_dtype is None:
+        # packed boots default to the quantized paged cache; plain runs
+        # keep today's dense bf16 pool
+        kv_dtype = "int8" if packed_ckpt is not None else "bf16"
+    if kv_dtype == "int8" and kv_page_size is None:
+        kv_page_size = 4 if max_len <= 128 else 16
 
     compiled = None
-    if use_codr:
-        compiled = codr.compile_params(
-            params, codr.EncodeConfig(n_unique=codr_unique),
-            backend=codr_backend)
+    boot_s = None
+    if packed_ckpt is not None:
+        import os
+        if not os.path.exists(packed_ckpt):
+            # self-contained: compile once and persist the artifact,
+            # then boot from it like any later run would
+            params = api.init_params(key, cfg)
+            t0 = time.monotonic()
+            cp = codr.compile_params(
+                params, codr.EncodeConfig(n_unique=codr_unique),
+                backend=codr_backend)
+            codr.save_packed(cp, packed_ckpt)
+            if verbose:
+                print(f"packed checkpoint written to {packed_ckpt} "
+                      f"({time.monotonic()-t0:.2f}s compile+save)")
+        t0 = time.monotonic()
+        compiled = codr.load_packed(packed_ckpt)
+        boot_s = time.monotonic() - t0
         params = compiled.params
         if verbose:
+            print(f"booted from packed checkpoint {packed_ckpt} in "
+                  f"{boot_s*1e3:.1f} ms (format v"
+                  f"{codr.CODR_FORMAT_VERSION}, mmap)")
             print(compiled.summary())
+    else:
+        params = api.init_params(key, cfg)
+        if use_codr:
+            compiled = codr.compile_params(
+                params, codr.EncodeConfig(n_unique=codr_unique),
+                backend=codr_backend)
+            params = compiled.params
+            if verbose:
+                print(compiled.summary())
 
     rng = np.random.default_rng(seed)
     # mixed prompt lengths around prompt_len: the join-on-prefill path
@@ -193,7 +249,8 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
     max_len = max(max_len, max(lens) + gen_len)    # pool must fit every req
 
     batcher = ContinuousBatcher(params, cfg, n_slots=n_slots,
-                                max_len=max_len)
+                                max_len=max_len, kv_dtype=kv_dtype,
+                                kv_page_size=kv_page_size)
     injector = None
     if chaos_seed is not None:
         from repro.runtime import resilience as res
@@ -222,6 +279,7 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
 
     n_tokens = sum(len(s) for s in streamed)
     toks_per_s = n_tokens / max(t_total, 1e-9)
+    kv_bytes = batcher.kv_bytes()
     if verbose:
         print(f"continuous batching: {n_requests} requests "
               f"(prompt lens {lens}) over {n_slots} slots → "
@@ -229,6 +287,10 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
               f"({toks_per_s:.1f} tok/s); steps={batcher.steps_run} "
               f"prefills={batcher.prefills_run} "
               f"peak_active={batcher.peak_active}")
+        print(f"KV pool: {kv_dtype}"
+              + (f" paged (page_size={kv_page_size})"
+                 if kv_page_size is not None else " dense")
+              + f", {kv_bytes/1e3:.1f} kB resident")
         if injector is not None:
             print(f"chaos: {len(injector.fired)}/{len(injector.plan)} "
                   f"scheduled faults fired "
@@ -242,17 +304,47 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
                   f"{stats['pack_bits_per_weight']:.2f} pack bits/weight")
 
     matched = None
+    check_dev = None
     if check:
         matched = 0
+        # a dense-cache twin on the SAME served params is the oracle for
+        # paged modes: bf16-paged must reproduce its tokens bit-exactly;
+        # int8 is lossy, so its contract is the teacher-forced logit
+        # bound (free-running greedy legitimately diverges on near-tied
+        # logits — see ContinuousBatcher.replay_logits)
+        dense_ref = (ContinuousBatcher(params, cfg, n_slots=n_slots,
+                                       max_len=max_len)
+                     if kv_page_size is not None else batcher)
         for p, s in zip(prompts, streamed):
-            ref, _ = batcher.generate_reference(p, max_new_tokens=gen_len)
-            assert s == ref, (
+            same, _ = batcher.generate_reference(p, max_new_tokens=gen_len)
+            assert s == same, (
                 f"streamed output diverged from the sequential reference:"
-                f" {s} vs {ref}")
+                f" {s} vs {same}")
+            dense_toks, _ = dense_ref.generate_reference(
+                p, max_new_tokens=gen_len)
+            if kv_dtype == "int8":
+                dense_rows = dense_ref.replay_logits(p, dense_toks)
+                paged_rows = batcher.replay_logits(p, dense_toks)
+                assert np.array_equal(paged_rows[0], dense_rows[0]), (
+                    "prefill logits must be bit-exact across KV modes")
+                spread = float(dense_rows.max() - dense_rows.min()) or 1.0
+                dev = float(np.abs(paged_rows - dense_rows).max()) / spread
+                check_dev = max(check_dev or 0.0, dev)
+                assert dev < 0.10, (
+                    f"int8-paged teacher-forced logits deviate "
+                    f"{dev:.4f} of the dense logit spread (bound 0.10)")
+            else:
+                assert s == dense_toks, (
+                    f"bf16 KV must match the dense-cache reference "
+                    f"bit-exactly: {s} vs {dense_toks}")
             matched += 1
         if verbose:
             print(f"check: {matched}/{n_requests} streamed outputs "
-                  f"bit-identical to the sequential reference")
+                  f"verified against the dense-cache sequential "
+                  f"reference"
+                  + (f" (worst teacher-forced logit deviation "
+                     f"{check_dev:.4f} of spread, bound 0.10)"
+                     if check_dev is not None else " (bit-identical)"))
 
     return {
         "arch": arch, "n_requests": n_requests, "n_slots": n_slots,
@@ -265,6 +357,9 @@ def run_serve_continuous(*, arch: str = "qwen2.5-3b", n_requests: int = 4,
         "faults_fired": (len(injector.fired) if injector is not None
                          else None),
         "worker_restarts": batcher.worker_restarts,
+        "kv_dtype": kv_dtype, "kv_page_size": kv_page_size,
+        "kv_bytes": kv_bytes, "boot_s": boot_s,
+        "packed_ckpt": packed_ckpt, "check_dev": check_dev,
     }
 
 
@@ -299,14 +394,32 @@ def main() -> None:
                          "into the continuous-batching run; combine "
                          "with --check to assert outputs survive "
                          "bit-identically (--continuous)")
+    ap.add_argument("--packed-ckpt", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="boot from a packed checkpoint artifact "
+                         "(codr.save_packed); writes one first if PATH "
+                         "is missing.  Without PATH a per-arch default "
+                         "under /tmp is used.  Implies --kv-dtype int8 "
+                         "unless overridden (--continuous)")
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default=None,
+                    help="KV cache storage: bf16 (bit-identical; dense "
+                         "unless --kv-page-size) or int8 (quantized "
+                         "paged) (--continuous)")
+    ap.add_argument("--kv-page-size", type=int, default=None,
+                    help="tokens per KV page; enables the paged pool "
+                         "for bf16 too (--continuous)")
     args = ap.parse_args()
+    packed_ckpt = args.packed_ckpt
+    if packed_ckpt == "":
+        packed_ckpt = f"/tmp/codr_packed_{args.arch.replace('/', '_')}.codr"
     if args.continuous:
         run_serve_continuous(
             arch=args.arch, n_requests=args.requests, n_slots=args.slots,
             prompt_len=args.prompt_len, gen_len=args.gen_len,
             use_codr=args.codr, codr_unique=args.codr_unique,
             codr_backend=args.codr_backend, check=args.check,
-            chaos_seed=args.chaos)
+            chaos_seed=args.chaos, kv_dtype=args.kv_dtype,
+            kv_page_size=args.kv_page_size, packed_ckpt=packed_ckpt)
     else:
         run_serve(arch=args.arch, batch=args.batch,
                   prompt_len=args.prompt_len, gen_len=args.gen_len,

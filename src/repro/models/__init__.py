@@ -22,7 +22,11 @@ def get_model(cfg) -> types.SimpleNamespace:
             return encdec.prefill(params, batch["prefix"], batch["tokens"],
                                   cfg)
 
-        def init_cache(cfg, batch, seq, dtype=jnp.bfloat16):
+        def init_cache(cfg, batch, seq, dtype=jnp.bfloat16, paged=None):
+            if paged is not None:
+                raise NotImplementedError(
+                    "paged KV cache is decoder-only for now "
+                    "(enc-dec caches carry a cross-attention half)")
             return encdec.init_cache(cfg, batch, seq,
                                      enc_seq=cfg.frontend_seq or seq,
                                      dtype=dtype)
@@ -36,8 +40,8 @@ def get_model(cfg) -> types.SimpleNamespace:
         return lm.prefill(params, batch["tokens"], cfg,
                           prefix=batch.get("prefix"))
 
-    def init_cache(cfg, batch, seq, dtype=jnp.bfloat16):
-        return lm.init_cache(cfg, batch, seq, dtype=dtype)
+    def init_cache(cfg, batch, seq, dtype=jnp.bfloat16, paged=None):
+        return lm.init_cache(cfg, batch, seq, dtype=dtype, paged=paged)
 
     return types.SimpleNamespace(
         init_params=lm.init_params, train_loss=lm.train_loss,

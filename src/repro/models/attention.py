@@ -15,6 +15,7 @@ except ImportError:                    # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.models import cache as cache_lib
 from repro.models.common import (apply_rope, dense_init, dense_weight,
                                  linear, norm_apply, norm_init, rms_norm)
 from repro.sharding import current_ctx, maybe_constrain
@@ -303,7 +304,14 @@ def gqa_decode(p, x, cfg, cache, pos):
     k_cache, v_cache = cache
     positions = decode_positions(pos, x.shape[0])
     q, k_new, v_new = _qkv(p, x, cfg, positions)
-    if cfg.decode_attn == "dist" and jnp.ndim(pos) == 0:
+    if isinstance(k_cache, cache_lib.PagedKV):
+        # paged lane: write the new row into the slot's page, then run
+        # the standard masked attention over the gathered dense view —
+        # bf16 pages reproduce the contiguous cache byte-for-byte
+        k_cache = k_cache.update(k_new, pos)
+        v_cache = v_cache.update(v_new, pos)
+        out = decode_attention(q, k_cache.gather(), v_cache.gather(), pos)
+    elif cfg.decode_attn == "dist" and jnp.ndim(pos) == 0:
         out, k_cache, v_cache = decode_attention_dist(
             q, k_cache, v_cache, k_new, v_new, pos)
     else:
@@ -318,6 +326,12 @@ def gqa_decode(p, x, cfg, cache, pos):
 def gqa_cache_init(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
     shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
     return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def gqa_cache_init_paged(cfg, spec, dtype=jnp.bfloat16):
+    feat = (cfg.n_kv_heads, cfg.head_dim)
+    return (cache_lib.paged_kv_init(spec, feat, dtype),
+            cache_lib.paged_kv_init(spec, feat, dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -395,25 +409,31 @@ def mla_decode(p, x, cfg, cache, pos):
     positions = decode_positions(pos, b)
     qn, qrot = _mla_q(p, x, cfg, positions)              # (B,1,H,dn/dr)
     ckv_new, krot_new = _mla_ckv(p, x, cfg, positions)
-    ckv_cache = cache_update(ckv_cache, ckv_new, pos)
-    krot_cache = cache_update(krot_cache, krot_new, pos)
+    if isinstance(ckv_cache, cache_lib.PagedKV):
+        ckv_cache = ckv_cache.update(ckv_new, pos)
+        krot_cache = krot_cache.update(krot_new, pos)
+        ckv_dense, krot_dense = ckv_cache.gather(), krot_cache.gather()
+    else:
+        ckv_cache = cache_update(ckv_cache, ckv_new, pos)
+        krot_cache = cache_update(krot_cache, krot_new, pos)
+        ckv_dense, krot_dense = ckv_cache, krot_cache
 
     # absorbed form consumes the raw weight, not a matmul — decode a
     # packed leaf on dispatch (identity for dense params)
     w_kv_b = dense_weight(p["kv_b_proj"]).reshape(c, h, dn + dv)
     w_uk, w_uv = w_kv_b[..., :dn], w_kv_b[..., dn:]
     q_lat = _einsum_f32("bqhd,chd->bqhc", qn, w_uk.astype(qn.dtype))
-    scores = (_einsum_f32("bqhc,bsc->bhqs", q_lat.astype(ckv_cache.dtype),
-                          ckv_cache)
-              + _einsum_f32("bqhd,bsd->bhqs", qrot.astype(krot_cache.dtype),
-                            krot_cache))
+    scores = (_einsum_f32("bqhc,bsc->bhqs", q_lat.astype(ckv_dense.dtype),
+                          ckv_dense)
+              + _einsum_f32("bqhd,bsd->bhqs", qrot.astype(krot_dense.dtype),
+                            krot_dense))
     scores = scores / math.sqrt(dn + dr)
     posb = jnp.broadcast_to(jnp.asarray(pos), (b,))
-    mask = jnp.arange(ckv_cache.shape[1])[None, :] <= posb[:, None]
+    mask = jnp.arange(ckv_dense.shape[1])[None, :] <= posb[:, None]
     scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     attn = jax.nn.softmax(scores, axis=-1)
-    out_lat = _einsum_f32("bhqs,bsc->bqhc", attn.astype(ckv_cache.dtype),
-                          ckv_cache)
+    out_lat = _einsum_f32("bhqs,bsc->bqhc", attn.astype(ckv_dense.dtype),
+                          ckv_dense)
     out = jnp.einsum("bqhc,chd->bqhd", out_lat, w_uv.astype(jnp.float32))
     out = linear(out.reshape(b, 1, h * dv).astype(x.dtype), p["o_proj"])
     return out, (ckv_cache, krot_cache)
@@ -422,3 +442,8 @@ def mla_decode(p, x, cfg, cache, pos):
 def mla_cache_init(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
     return (jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
             jnp.zeros((batch, seq, cfg.rope_head_dim), dtype))
+
+
+def mla_cache_init_paged(cfg, spec, dtype=jnp.bfloat16):
+    return (cache_lib.paged_kv_init(spec, (cfg.kv_lora_rank,), dtype),
+            cache_lib.paged_kv_init(spec, (cfg.rope_head_dim,), dtype))

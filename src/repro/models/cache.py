@@ -17,9 +17,22 @@ here move single-request caches in and out of that pool:
   stay bit-identical to a solo decode.
 * ``read_slot`` extracts slot ``i`` back out as a batch-1 cache.
 
+Paged mode (docs/DESIGN.md §2.2) replaces the contiguous per-slot
+sequence buffers with :class:`PagedKV` leaves: a shared pool of
+fixed-size pages plus a per-slot page table.  Storage is int8 with one
+scale per page (requantized in place whenever a new row grows the page
+maximum) or bf16 (``kv_dtype="bf16"``), in which case the gathered
+cache is bit-identical to the contiguous one.  Physical page 0 is a
+reserved *scratch* page: retired and never-admitted slots point every
+table entry at it, so the pooled decode step — which advances all
+slots, active or not — lands its dead writes somewhere harmless
+instead of in a page that may already belong to a new request.
+
 No imports from ``repro.core`` — this is a models-layer utility.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -74,3 +87,245 @@ def read_slot(pool, slot, axes):
     def one(pl, ax):
         return jax.lax.dynamic_slice_in_dim(pl, slot, 1, axis=ax)
     return jax.tree.map(one, pool, axes)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache
+# ---------------------------------------------------------------------------
+
+SCRATCH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Geometry of a paged KV pool (host-side, static).
+
+    ``n_pages`` counts *physical* pages including the reserved scratch
+    page 0; the default provisions every slot's worst case so admission
+    can never fail on pages alone.
+    """
+
+    page_size: int
+    max_len: int
+    n_slots: int
+    kv_dtype: str = "int8"          # "int8" | "bf16"
+    n_pages: int | None = None
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.kv_dtype not in ("int8", "bf16"):
+            raise ValueError(f"kv_dtype must be 'int8' or 'bf16', "
+                             f"got {self.kv_dtype!r}")
+
+    @property
+    def max_pages(self) -> int:
+        """Logical pages per slot (the page-table row length)."""
+        return -(-self.max_len // self.page_size)
+
+    @property
+    def total_pages(self) -> int:
+        n = self.n_pages if self.n_pages is not None \
+            else 1 + self.n_slots * self.max_pages
+        if n < 1 + self.max_pages:
+            raise ValueError(
+                f"n_pages={n} cannot hold even one request "
+                f"({self.max_pages} pages + scratch)")
+        return n
+
+    def pages_for(self, total_len: int) -> int:
+        """Pages a request of ``total_len`` tokens must reserve."""
+        return min(self.max_pages, -(-total_len // self.page_size))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKV:
+    """One paged KV buffer: page data + per-page scales + page tables.
+
+    ``data``  ``(n_pages, page_size, *feat)`` int8 (quantized) or bf16.
+    ``scale`` ``(n_pages,)`` f32 — per-page dequant scale (int8 mode).
+    ``table`` ``(n_slots, max_pages)`` int32 physical-page ids.
+
+    The three arrays are pytree children, so the standard scan-carry
+    stacking (``broadcast_to`` over ``n_periods``) and per-period
+    ``dynamic_index_in_dim`` slicing in ``models/lm.py`` apply
+    unchanged; ``page_size``/``seq_len``/``quantized`` ride in the
+    static aux.
+    """
+
+    data: jax.Array
+    scale: jax.Array
+    table: jax.Array
+    page_size: int
+    seq_len: int                     # logical max_len — gather crops to it
+    quantized: bool
+
+    def tree_flatten(self):
+        return ((self.data, self.scale, self.table),
+                (self.page_size, self.seq_len, self.quantized))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # -- decode-step write ---------------------------------------------------
+    def update(self, new, pos):
+        """Write one new token row per slot at position ``pos``.
+
+        ``new`` is ``(B, 1, *feat)`` (``cache_update`` semantics),
+        ``pos`` scalar or ``(B,)``; ``B`` must equal the table's slot
+        count.  int8 pages requantize in place under a grow-only scale:
+        ``new_scale = max(old_scale, amax(row)/127)``, so earlier rows
+        of the page are re-rounded only when the running maximum grows.
+        """
+        b = new.shape[0]
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 0:
+            pos = jnp.full((b,), pos, jnp.int32)
+        logical = pos // self.page_size
+        off = pos % self.page_size
+        phys = self.table[jnp.arange(b), logical]            # (B,)
+        row = new[:, 0]                                      # (B, *feat)
+        if not self.quantized:
+            data = self.data.at[phys, off].set(row.astype(self.data.dtype))
+            return dataclasses.replace(self, data=data)
+        feat_axes = tuple(range(1, row.ndim))
+        bshape = (b,) + (1,) * len(feat_axes)
+        rowf = row.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(rowf), axis=feat_axes)        # (B,)
+        old_s = self.scale[phys]
+        new_s = jnp.maximum(old_s, amax / 127.0)
+        safe = jnp.where(new_s > 0, new_s, 1.0)
+        page = self.data[phys].astype(jnp.float32) \
+            * old_s.reshape(bshape)[:, None]                 # (B, ps, *feat)
+        page = page.at[jnp.arange(b), off].set(rowf)
+        q = jnp.clip(jnp.round(page / safe.reshape(bshape)[:, None]),
+                     -127, 127).astype(jnp.int8)
+        data = self.data.at[phys].set(q)
+        scale = self.scale.at[phys].set(new_s)
+        return dataclasses.replace(self, data=data, scale=scale)
+
+    # -- dense view for attention --------------------------------------------
+    def gather(self):
+        """Dequantized contiguous ``(n_slots, seq_len, *feat)`` view.
+
+        bf16 mode skips the scale multiply entirely — the result holds
+        the exact bytes a contiguous bf16 cache would, which is what
+        makes ``kv_dtype="bf16"`` paged bit-identical to unpaged."""
+        d = self.data[self.table]                # (S, mp, ps, *feat)
+        feat = d.shape[3:]
+        if self.quantized:
+            s = self.scale[self.table]           # (S, mp)
+            s = s.reshape(s.shape + (1,) * (1 + len(feat)))
+            d = (d.astype(jnp.float32) * s).astype(jnp.bfloat16)
+        d = d.reshape(d.shape[0], -1, *feat)
+        return d[:, :self.seq_len]
+
+    @property
+    def n_slots(self) -> int:
+        return self.table.shape[-2]
+
+
+def paged_kv_init(spec: PagedSpec, feat: tuple, dtype=jnp.bfloat16) -> PagedKV:
+    """Fresh all-scratch paged buffer for one KV tensor of ``*feat``."""
+    dt = jnp.int8 if spec.kv_dtype == "int8" else dtype
+    return PagedKV(
+        data=jnp.zeros((spec.total_pages, spec.page_size) + tuple(feat), dt),
+        scale=jnp.zeros((spec.total_pages,), jnp.float32),
+        table=jnp.zeros((spec.n_slots, spec.max_pages), jnp.int32),
+        page_size=spec.page_size,
+        seq_len=spec.max_len,
+        quantized=spec.kv_dtype == "int8")
+
+
+def _write_prefill_one(pkv: PagedKV, dense, slot, pages):
+    """Write a batch-1 seq-P prefill leaf into ``pages`` of ``pkv``.
+
+    ``pages`` is the slot's full ``(max_pages,)`` table row (tail
+    entries scratch).  int8 pages get a fresh per-page scale; the
+    scales of reserved-but-unwritten pages reset to 0 so the first
+    decode write into them starts from a clean slate regardless of the
+    previous tenant's bytes."""
+    p_len = dense.shape[1]
+    ps = pkv.page_size
+    n_pg = -(-p_len // ps)
+    feat = dense.shape[2:]
+    rows = jnp.pad(dense[0], ((0, n_pg * ps - p_len),) + ((0, 0),) * len(feat))
+    rows = rows.reshape(n_pg, ps, *feat)
+    tgt = pages[:n_pg]
+    if pkv.quantized:
+        rf = rows.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(rf), axis=tuple(range(1, rf.ndim)))
+        s = amax / 127.0
+        safe = s.reshape((n_pg,) + (1,) * (1 + len(feat)))
+        safe = jnp.where(safe > 0, safe, 1.0)
+        q = jnp.clip(jnp.round(rf / safe), -127, 127).astype(jnp.int8)
+        data = pkv.data.at[tgt].set(q)
+        scale = pkv.scale.at[pages].set(0.0).at[tgt].set(s)
+        scale = scale.at[SCRATCH_PAGE].set(0.0)
+    else:
+        data = pkv.data.at[tgt].set(rows.astype(pkv.data.dtype))
+        scale = pkv.scale
+    table = pkv.table.at[slot].set(pages)
+    return dataclasses.replace(pkv, data=data, scale=scale, table=table)
+
+
+def write_slot_paged(pool, cache, slot, pages):
+    """Paged counterpart of :func:`write_slot`.
+
+    ``pool`` holds :class:`PagedKV` leaves (possibly with an
+    ``n_periods`` stacking axis on their children); ``cache`` is the
+    matching batch-1 dense prefill cache; ``pages`` is the slot's
+    ``(max_pages,)`` physical-page row."""
+    slot = jnp.asarray(slot, jnp.int32)
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def one(pkv, dense):
+        if pkv.table.ndim == 3:      # stacked over periods
+            return jax.vmap(_write_prefill_one,
+                            in_axes=(0, 0, None, None))(pkv, dense, slot,
+                                                        pages)
+        return _write_prefill_one(pkv, dense, slot, pages)
+    return jax.tree.map(one, pool, cache,
+                        is_leaf=lambda x: isinstance(x, PagedKV))
+
+
+def set_tables(pool, table):
+    """Overwrite every leaf's page table with host-side ``table``.
+
+    The batcher owns the table on the host (admission allocates, EOS
+    retirement frees by repointing rows at scratch); this pushes the
+    authoritative copy into the device pool before each decode step."""
+    t = jnp.asarray(table, jnp.int32)
+
+    def one(pkv):
+        return dataclasses.replace(
+            pkv, table=jnp.broadcast_to(t, pkv.table.shape))
+    return jax.tree.map(one, pool, is_leaf=lambda x: isinstance(x, PagedKV))
+
+
+class PagePool:
+    """Host-side free-list allocator over a :class:`PagedSpec`.
+
+    Page 0 (scratch) is never handed out.  ``alloc`` is all-or-nothing
+    so a request either reserves its whole worst case at admission or
+    stays pending — no mid-stream out-of-pages."""
+
+    def __init__(self, spec: PagedSpec):
+        self.spec = spec
+        self._free = list(range(spec.total_pages - 1, 0, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p != SCRATCH_PAGE:
+                self._free.append(int(p))

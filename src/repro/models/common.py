@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codr_linear import PackedLinear, dense_weight  # noqa: F401
+from repro.core.codr_linear import (PackedEmbedding, PackedLinear,  # noqa: F401
+                                    dense_weight)
 from repro.sharding import maybe_constrain
 
 DEFAULT_DTYPE = jnp.bfloat16
@@ -39,6 +40,29 @@ def linear(x: jax.Array, w, b: jax.Array | None = None) -> jax.Array:
     if b is not None:
         y = y + b.astype(x.dtype)
     return y
+
+
+def embedding_lookup(table, tokens: jax.Array,
+                     dtype=DEFAULT_DTYPE) -> jax.Array:
+    """``table[tokens]`` — the embedding gather every model routes
+    through.  A plain ``(V, d)`` array is a ``jnp.take``; a
+    :class:`repro.core.codr_linear.PackedEmbedding` leaf resolves
+    through the backend registry and gathers *packed rows*, decoding
+    only the tokens actually requested (docs/DESIGN.md §2.2)."""
+    if isinstance(table, PackedEmbedding):
+        from repro.core import backends
+        return backends.resolve(table.backend).gather(tokens, table
+                                                      ).astype(dtype)
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(x: jax.Array, table) -> jax.Array:
+    """``x @ table.T`` — the logit projection against the (possibly
+    packed) output embedding."""
+    if isinstance(table, PackedEmbedding):
+        from repro.core import backends
+        return backends.resolve(table.backend).unembed(x, table)
+    return jnp.dot(x, table.T.astype(x.dtype))
 
 
 def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6,

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models.common import (DEFAULT_DTYPE, constrain_tokens, dense_init,
-                                 embed_init, linear, norm_apply, norm_init,
+                                 embed_init, embedding_lookup, unembed,
+                                 linear, norm_apply, norm_init,
                                  softmax_xent)
 
 
@@ -105,7 +106,7 @@ def _dec_block(lp, x, cfg, mode, cache, pos, positions, enc_out, enc_kv):
 
 def decode_forward(params, tokens, cfg, enc_out=None, *, mode="train",
                    cache=None, pos=None):
-    x = jnp.take(params["embed"], tokens, axis=0).astype(DEFAULT_DTYPE)
+    x = embedding_lookup(params["embed"], tokens, DEFAULT_DTYPE)
     x = constrain_tokens(x)
     b, s = x.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
@@ -135,7 +136,7 @@ def decode_forward(params, tokens, cfg, enc_out=None, *, mode="train",
     x = norm_apply(x, params["final_norm"], cfg.norm_type, f32=cfg.norm_f32)
     if mode == "prefill":
         x = x[:, -1:]
-    logits = jnp.dot(x, params["out_embed"].T.astype(x.dtype))
+    logits = unembed(x, params["out_embed"])
     return logits, new_cache
 
 

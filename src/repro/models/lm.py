@@ -19,7 +19,8 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm
 from repro.models.common import (DEFAULT_DTYPE, constrain_tokens, embed_init,
-                                 norm_apply, norm_init, softmax_xent)
+                                 embedding_lookup, norm_apply, norm_init,
+                                 softmax_xent, unembed)
 
 # ---------------------------------------------------------------------------
 # init
@@ -80,11 +81,19 @@ def init_params(key, cfg) -> dict:
 # caches
 # ---------------------------------------------------------------------------
 
-def _mixer_cache(kind: str, cfg, batch: int, seq: int, dtype):
+def _mixer_cache(kind: str, cfg, batch: int, seq: int, dtype, paged=None):
     if kind == "attn":
+        if paged is not None:
+            if cfg.use_mla:
+                return attn.mla_cache_init_paged(cfg, paged, dtype)
+            return attn.gqa_cache_init_paged(cfg, paged, dtype)
         if cfg.use_mla:
             return attn.mla_cache_init(cfg, batch, seq, dtype)
         return attn.gqa_cache_init(cfg, batch, seq, dtype)
+    if paged is not None:
+        raise NotImplementedError(
+            f"paged KV cache covers attention mixers only, got {kind!r} "
+            f"({cfg.name}) — SSM states have no sequence axis to page")
     if kind == "mamba":
         return ssm.mamba_state_init(cfg, batch, dtype)
     if kind == "mlstm":
@@ -94,9 +103,18 @@ def _mixer_cache(kind: str, cfg, batch: int, seq: int, dtype):
     raise ValueError(kind)
 
 
-def init_cache(cfg, batch: int, seq: int, dtype=DEFAULT_DTYPE) -> dict:
+def init_cache(cfg, batch: int, seq: int, dtype=DEFAULT_DTYPE,
+               paged=None) -> dict:
+    """``paged`` is an optional :class:`repro.models.cache.PagedSpec`;
+    when given, attention KV leaves become :class:`PagedKV` pools
+    (``batch`` must equal ``paged.n_slots``, ``seq`` its ``max_len``)."""
+    if paged is not None and (batch != paged.n_slots
+                              or seq != paged.max_len):
+        raise ValueError(
+            f"paged cache geometry mismatch: batch={batch}/seq={seq} vs "
+            f"spec n_slots={paged.n_slots}/max_len={paged.max_len}")
     plan = cfg.layer_plan()
-    period = {f"b{i}": _mixer_cache(spec[0], cfg, batch, seq, dtype)
+    period = {f"b{i}": _mixer_cache(spec[0], cfg, batch, seq, dtype, paged)
               for i, spec in enumerate(plan)}
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape),
@@ -104,7 +122,7 @@ def init_cache(cfg, batch: int, seq: int, dtype=DEFAULT_DTYPE) -> dict:
     out = {"stack": stacked}
     if cfg.n_dense_layers:
         out["prologue"] = [
-            _mixer_cache("attn", cfg, batch, seq, dtype)
+            _mixer_cache("attn", cfg, batch, seq, dtype, paged)
             for _ in range(cfg.n_dense_layers)]
     return out
 
@@ -159,7 +177,7 @@ def forward(params, tokens, cfg, *, mode: str = "train", cache=None,
     mode='decode' : S == 1, attends into the preallocated cache at ``pos``.
     """
     plan = cfg.layer_plan()
-    x = jnp.take(params["embed"], tokens, axis=0).astype(DEFAULT_DTYPE)
+    x = embedding_lookup(params["embed"], tokens, DEFAULT_DTYPE)
     if prefix is not None:
         x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
     x = constrain_tokens(x)
@@ -223,7 +241,7 @@ def forward(params, tokens, cfg, *, mode: str = "train", cache=None,
     if mode == "prefill":
         x = x[:, -1:]
     out_embed = params.get("out_embed", params["embed"])
-    logits = jnp.dot(x, out_embed.T.astype(x.dtype))
+    logits = unembed(x, out_embed)
 
     new_cache = None
     if mode != "train":

@@ -1,0 +1,165 @@
+"""Packed checkpoint artifact: round-trip bit-identity + corruption.
+
+Contract (docs/DESIGN.md §2.2): ``codr.save_packed`` /
+``codr.load_packed`` round-trip a ``CompiledParams`` byte-for-byte —
+same packed bitstreams, same logits bits, same config/plan/paths — and
+every way an artifact can be damaged (missing files, truncation, dtype
+drift, version skew) raises ``PackedCheckpointError`` with a message
+naming the problem, never a silent wrong-weights boot.
+"""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as codr
+from repro.configs import get_config, smoke_variant
+from repro.models import get_model
+
+N_UNIQUE = 16
+
+
+def _compiled(arch, key):
+    cfg = smoke_variant(get_config(arch))
+    api = get_model(cfg)
+    params = api.init_params(key, cfg)
+    cp = codr.compile_params(params, codr.EncodeConfig(n_unique=N_UNIQUE),
+                             backend="codr_matmul")
+    return cfg, api, cp
+
+
+def _batch(cfg, key):
+    b = {"tokens": jax.random.randint(key, (2, 6), 0, cfg.vocab_size)}
+    if cfg.frontend or cfg.family == "encdec":
+        b["prefix"] = jax.random.normal(
+            key, (2, cfg.frontend_seq, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "seamless-m4t-medium"])
+def test_roundtrip_bit_identical_logits(arch, key, tmp_path):
+    cfg, api, cp = _compiled(arch, key)
+    batch = _batch(cfg, key)
+    ref, _ = api.prefill(cp.params, batch, cfg)
+
+    path = str(tmp_path / "ck.codr")
+    assert codr.save_packed(cp, path) == path
+    cp2 = codr.load_packed(path)
+    got, _ = api.prefill(cp2.params, batch, cfg)
+    np.testing.assert_array_equal(np.asarray(ref, np.float32),
+                                  np.asarray(got, np.float32))
+    assert cp2.config == cp.config
+    assert cp2.backend == cp.backend
+    assert cp2.packed_paths == cp.packed_paths
+    assert cp2.quantized_paths == cp.quantized_paths
+    assert cp2.embed_paths == cp.embed_paths
+    assert cp2.reports == cp.reports
+    assert cp2.hbm_bytes() == cp.hbm_bytes()
+
+
+def test_roundtrip_preserves_plan(key, tmp_path):
+    from repro.tune import TunePlan
+    cfg, api, _ = _compiled("qwen2.5-3b", key)
+    params = api.init_params(key, cfg)
+    plan = TunePlan({}, default=codr.EncodeConfig(n_unique=N_UNIQUE))
+    cp = codr.compile_params(params, codr.EncodeConfig(n_unique=N_UNIQUE),
+                             plan=plan)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    cp2 = codr.load_packed(path)
+    assert cp2.plan is not None
+    assert cp2.plan.to_json() == plan.to_json()
+
+
+def test_atomic_overwrite(key, tmp_path):
+    _, _, cp = _compiled("qwen2.5-3b", key)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    codr.save_packed(cp, path)                 # overwrite is clean
+    assert not os.path.exists(path + ".tmp")   # no stale staging dir
+    codr.load_packed(path)
+
+
+def test_missing_artifact_raises(tmp_path):
+    with pytest.raises(codr.PackedCheckpointError, match="manifest"):
+        codr.load_packed(str(tmp_path / "nope.codr"))
+
+
+def test_version_mismatch_raises(key, tmp_path):
+    _, _, cp = _compiled("qwen2.5-3b", key)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    m = json.load(open(os.path.join(path, "manifest.json")))
+    m["format_version"] = codr.CODR_FORMAT_VERSION + 1
+    json.dump(m, open(os.path.join(path, "manifest.json"), "w"))
+    with pytest.raises(codr.PackedCheckpointError, match="format version"):
+        codr.load_packed(path)
+
+
+def test_truncated_array_raises(key, tmp_path):
+    _, _, cp = _compiled("qwen2.5-3b", key)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    apath = os.path.join(path, "arr_0.npy")
+    blob = open(apath, "rb").read()
+    open(apath, "wb").write(blob[:len(blob) // 2])
+    with pytest.raises(codr.PackedCheckpointError):
+        codr.load_packed(path)
+
+
+def test_missing_array_file_raises(key, tmp_path):
+    _, _, cp = _compiled("qwen2.5-3b", key)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    os.remove(os.path.join(path, "arr_1.npy"))
+    with pytest.raises(codr.PackedCheckpointError, match="missing array"):
+        codr.load_packed(path)
+
+
+def test_wrong_dtype_raises(key, tmp_path):
+    _, _, cp = _compiled("qwen2.5-3b", key)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    # rewrite arr_0 with a different dtype than the manifest promises
+    a = np.load(os.path.join(path, "arr_0.npy"))
+    np.save(os.path.join(path, "arr_0.npy"), a.astype(np.float64))
+    with pytest.raises(codr.PackedCheckpointError, match="dtype"):
+        codr.load_packed(path)
+
+
+def test_bad_magic_raises(key, tmp_path):
+    _, _, cp = _compiled("qwen2.5-3b", key)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    m = json.load(open(os.path.join(path, "manifest.json")))
+    m["magic"] = "not-a-codr-checkpoint"
+    json.dump(m, open(os.path.join(path, "manifest.json"), "w"))
+    with pytest.raises(codr.PackedCheckpointError, match="magic"):
+        codr.load_packed(path)
+
+
+def test_corrupt_manifest_json_raises(key, tmp_path):
+    _, _, cp = _compiled("qwen2.5-3b", key)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    mpath = os.path.join(path, "manifest.json")
+    blob = open(mpath).read()
+    open(mpath, "w").write(blob[:len(blob) // 2])
+    with pytest.raises(codr.PackedCheckpointError, match="JSON"):
+        codr.load_packed(path)
+
+
+def test_mmap_false_loads_materialized(key, tmp_path):
+    cfg, api, cp = _compiled("qwen2.5-3b", key)
+    batch = _batch(cfg, key)
+    ref, _ = api.prefill(cp.params, batch, cfg)
+    path = str(tmp_path / "ck.codr")
+    codr.save_packed(cp, path)
+    cp2 = codr.load_packed(path, mmap=False)
+    got, _ = api.prefill(cp2.params, batch, cfg)
+    np.testing.assert_array_equal(np.asarray(ref, np.float32),
+                                  np.asarray(got, np.float32))

@@ -1,0 +1,229 @@
+"""Quantized paged KV cache: differential + bit-identity contracts.
+
+The contracts under test (docs/DESIGN.md §2.2):
+
+* ``kv_dtype="bf16"`` paged is the escape hatch — every logit bit must
+  equal the dense contiguous cache's, pooled or solo, GQA or MLA.
+* ``kv_dtype="int8"`` is lossy but *deterministic*: a pooled run is
+  bit-identical to a solo run in the same mode, and a teacher-forced
+  replay of the dense reference's tokens stays within a stated fraction
+  of the dense logit spread (the int8 quantization floor measures
+  ~0.01; the bound asserts 0.10).
+* The page pool is all-or-nothing at admission and pages are freed on
+  retirement — a pool smaller than the concurrent demand serializes
+  requests instead of corrupting them.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.batching import ContinuousBatcher
+from repro.models import cache, get_model
+
+GQA, MLA = "qwen2.5-3b", "deepseek-v2-236b"
+
+
+def _params(arch, key):
+    cfg = smoke_variant(get_config(arch))
+    return cfg, get_model(cfg).init_params(key, cfg)
+
+
+def _prompt(n, vocab, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# PagedKV unit level: write/gather round-trips
+# ---------------------------------------------------------------------------
+
+def _roundtrip(kv_dtype, page_size, seq_len, feat, rng, *, n_slots=2):
+    spec = cache.PagedSpec(page_size=page_size,
+                           max_len=-(-seq_len // page_size) * page_size,
+                           n_slots=n_slots, kv_dtype=kv_dtype)
+    pkv = cache.paged_kv_init(spec, feat)
+    table = np.arange(1, 1 + n_slots * spec.max_pages,
+                      dtype=np.int32).reshape(n_slots, spec.max_pages)
+    pkv = cache.set_tables(pkv, jnp.asarray(table))
+    dense = rng.normal(size=(n_slots, seq_len, *feat)).astype(np.float32)
+    dense = np.asarray(jnp.asarray(dense, jnp.bfloat16), np.float32)
+    for t in range(seq_len):
+        pkv = pkv.update(jnp.asarray(dense[:, t:t + 1], jnp.bfloat16),
+                         jnp.int32(t))
+    got = np.asarray(pkv.gather()[:, :seq_len], np.float32)
+    return dense, got
+
+
+def test_paged_bf16_roundtrip_bitwise(rng):
+    dense, got = _roundtrip("bf16", 4, 10, (3, 5), rng)
+    np.testing.assert_array_equal(got, dense)
+
+
+def test_paged_int8_roundtrip_within_quant_floor(rng):
+    dense, got = _roundtrip("int8", 4, 10, (3, 5), rng)
+    # per-page scale is grow-only amax/127; one requantization per later
+    # row write adds at most another step — 2 quant steps of headroom
+    err = np.abs(got - dense).max()
+    assert err <= 2.0 * np.abs(dense).max() / 127.0
+    assert err > 0                           # int8 is genuinely lossy
+
+
+def test_paged_int8_tail_positions_zero(rng):
+    # gather pads to whole pages then crops to seq_len: the crop is what
+    # keeps summation shapes identical to the dense cache
+    spec = cache.PagedSpec(page_size=4, max_len=8, n_slots=1,
+                           kv_dtype="int8")
+    pkv = cache.paged_kv_init(spec, (2,))
+    pkv = cache.set_tables(pkv, jnp.asarray([[1, 2]], np.int32))
+    pkv = pkv.update(jnp.ones((1, 1, 2), jnp.bfloat16), jnp.int32(0))
+    g = np.asarray(pkv.gather(), np.float32)
+    assert g.shape == (1, 8, 2)
+    np.testing.assert_array_equal(g[:, 1:], 0.0)
+
+
+def test_page_pool_all_or_nothing_and_free():
+    spec = cache.PagedSpec(page_size=4, max_len=8, n_slots=2)
+    pool = cache.PagePool(spec)                    # 4 usable + scratch
+    assert pool.available == 4
+    a, b = pool.alloc(2), pool.alloc(2)
+    assert a is not None and b is not None
+    assert cache.SCRATCH_PAGE not in a + b
+    assert pool.alloc(1) is None                   # nothing left — refuse
+    assert pool.available == 0                     # ...and nothing leaked
+    pool.free(a)
+    assert pool.available == 2
+    assert pool.alloc(2) is not None
+
+
+def test_paged_spec_validation():
+    with pytest.raises(ValueError):
+        cache.PagedSpec(page_size=0, max_len=8, n_slots=1)
+    with pytest.raises(ValueError):
+        cache.PagedSpec(page_size=4, max_len=8, n_slots=1, kv_dtype="fp4")
+    with pytest.raises(ValueError):
+        # pool smaller than one request's worst case can never admit
+        cache.PagedSpec(page_size=4, max_len=16, n_slots=1,
+                        n_pages=2).total_pages
+
+
+# ---------------------------------------------------------------------------
+# batcher level: bf16 bit-identity, int8 determinism + differential bound
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [GQA, MLA])
+def test_bf16_paged_bit_identical_to_dense(arch, key):
+    cfg, params = _params(arch, key)
+    prompt = _prompt(6, cfg.vocab_size)
+    dense = ContinuousBatcher(params, cfg, n_slots=2, max_len=32)
+    paged = ContinuousBatcher(params, cfg, n_slots=2, max_len=32,
+                              kv_dtype="bf16", kv_page_size=4)
+    ref_toks, _ = dense.generate_reference(prompt, max_new_tokens=6)
+    got_toks, _ = paged.generate_reference(prompt, max_new_tokens=6)
+    assert got_toks == ref_toks
+    np.testing.assert_array_equal(
+        paged.replay_logits(prompt, ref_toks),
+        dense.replay_logits(prompt, ref_toks))
+
+
+@pytest.mark.parametrize("arch", [GQA, MLA])
+def test_int8_paged_teacher_forced_within_bound(arch, key):
+    cfg, params = _params(arch, key)
+    prompt = _prompt(6, cfg.vocab_size, seed=1)
+    dense = ContinuousBatcher(params, cfg, n_slots=2, max_len=32)
+    paged = ContinuousBatcher(params, cfg, n_slots=2, max_len=32,
+                              kv_dtype="int8", kv_page_size=4)
+    ref_toks, _ = dense.generate_reference(prompt, max_new_tokens=6)
+    ref_rows = dense.replay_logits(prompt, ref_toks)
+    got_rows = paged.replay_logits(prompt, ref_toks)
+    # prefill logits never touch the paged cache — bit-exact
+    np.testing.assert_array_equal(got_rows[0], ref_rows[0])
+    spread = float(ref_rows.max() - ref_rows.min())
+    dev = float(np.abs(got_rows - ref_rows).max()) / spread
+    assert dev < 0.10, dev
+
+
+def test_int8_pooled_bit_identical_to_int8_solo(key):
+    # lossy versus *dense*, but deterministic versus itself: the pooled
+    # run must reproduce the same-mode solo reference exactly, whatever
+    # physical page ids the allocator picked
+    cfg, params = _params(GQA, key)
+    b = ContinuousBatcher(params, cfg, n_slots=3, max_len=32,
+                          kv_dtype="int8", kv_page_size=4)
+    with b:
+        prompts = [_prompt(4 + i, cfg.vocab_size, seed=i)
+                   for i in range(5)]
+        hs = [b.submit(p, max_new_tokens=5) for p in prompts]
+        outs = [h.result(timeout=120) for h in hs]
+    for p, s in zip(prompts, outs):
+        ref, _ = b.generate_reference(p, max_new_tokens=5)
+        assert s == ref
+
+
+def test_page_exhaustion_serializes_not_corrupts(key):
+    # pool sized for ONE request's worst case: admission must gate on
+    # page availability and retirement must free pages, so both requests
+    # finish (serialized) with solo-identical outputs
+    cfg, params = _params(GQA, key)
+    # 4 usable pages; each request needs 3 (prompt 5 + gen 5 = 10 toks)
+    b = ContinuousBatcher(params, cfg, n_slots=2, max_len=16,
+                          kv_dtype="int8", kv_page_size=4, kv_pages=5)
+    with b:
+        prompts = [_prompt(5, cfg.vocab_size, seed=i) for i in range(2)]
+        hs = [b.submit(p, max_new_tokens=5) for p in prompts]
+        outs = [h.result(timeout=120) for h in hs]
+    assert b.peak_active == 1                      # never ran concurrently
+    for p, s in zip(prompts, outs):
+        ref, _ = b.generate_reference(p, max_new_tokens=5)
+        assert s == ref
+
+
+def test_kv_bytes_int8_smaller_than_bf16(key):
+    cfg, params = _params(GQA, key)
+    bf = ContinuousBatcher(params, cfg, n_slots=2, max_len=32)
+    i8 = ContinuousBatcher(params, cfg, n_slots=2, max_len=32,
+                           kv_dtype="int8", kv_page_size=4)
+    assert 0 < i8.kv_bytes() < bf.kv_bytes()
+
+
+def test_paged_rejections(key):
+    cfg, params = _params(GQA, key)
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ContinuousBatcher(params, cfg, kv_dtype="fp8")
+    api = get_model(cfg)
+    spec = cache.PagedSpec(page_size=4, max_len=16, n_slots=2)
+    with pytest.raises(ValueError):
+        api.init_cache(cfg, 3, 16, paged=spec)     # batch != n_slots
+    ecfg = smoke_variant(get_config("seamless-m4t-medium"))
+    with pytest.raises(NotImplementedError):
+        get_model(ecfg).init_cache(ecfg, 2, 16, paged=spec)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: paged round-trip across geometry (optional dep)
+# ---------------------------------------------------------------------------
+
+def test_paged_roundtrip_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(page_size=st.integers(1, 8), seq_len=st.integers(1, 16),
+           n_heads=st.integers(1, 3), head_dim=st.integers(1, 4),
+           kv_dtype=st.sampled_from(["bf16", "int8"]),
+           seed=st.integers(0, 2**31 - 1))
+    def prop(page_size, seq_len, n_heads, head_dim, kv_dtype, seed):
+        rng = np.random.default_rng(seed)
+        dense, got = _roundtrip(kv_dtype, page_size, seq_len,
+                                (n_heads, head_dim), rng, n_slots=1)
+        if kv_dtype == "bf16":
+            np.testing.assert_array_equal(got, dense)
+        else:
+            amax = np.abs(dense).max()
+            assert np.abs(got - dense).max() <= 2.0 * amax / 127.0 + 1e-7
+
+    prop()

@@ -101,3 +101,38 @@ def test_serve_continuous_checked():
     assert all(len(s) == 3 for s in res["gen"])
     assert res["peak_active"] <= 2              # pool bound respected
     assert res["prefills_run"] == 4
+
+
+def test_serve_continuous_packed_ckpt_int8(tmp_path):
+    """--packed-ckpt end to end: first boot compiles + saves the
+    artifact, serves from the int8 paged KV pool, and check verifies
+    against the dense-cache reference; a second boot mmap-loads the
+    same artifact and reproduces the first run's outputs exactly (the
+    artifact, not the RNG, carries the weights)."""
+    import os
+    path = str(tmp_path / "ck.codr")
+    res = run_serve_continuous(arch="qwen2.5-3b", n_requests=3, n_slots=2,
+                               prompt_len=4, gen_len=3, check=True,
+                               packed_ckpt=path, verbose=False)
+    assert os.path.isdir(path)
+    assert res["checked"] == 3
+    assert res["kv_dtype"] == "int8"            # packed boot defaults paged
+    assert res["kv_page_size"] == 4
+    assert res["boot_s"] is not None
+    assert res["kv_bytes"] > 0
+    res2 = run_serve_continuous(arch="qwen2.5-3b", n_requests=3, n_slots=2,
+                                prompt_len=4, gen_len=3, check=True,
+                                packed_ckpt=path, verbose=False)
+    assert res2["gen"] == res["gen"]
+
+
+def test_serve_continuous_bf16_paged_matches_dense(tmp_path):
+    """kv_dtype=bf16 with a page size is the escape hatch: identical
+    streamed tokens to the dense-pool run, same params."""
+    kw = dict(arch="qwen2.5-3b", n_requests=3, n_slots=2,
+              prompt_len=4, gen_len=3, verbose=False)
+    dense = run_serve_continuous(**kw)
+    paged = run_serve_continuous(kv_dtype="bf16", kv_page_size=4,
+                                 check=True, **kw)
+    assert paged["gen"] == dense["gen"]
+    assert paged["checked"] == 3

@@ -178,6 +178,14 @@ def test_compiled_params_accounting(key):
     assert cp.bits_per_weight() < 16
     assert cp.reports and all(r.pack_bits > 0 for r in cp.reports)
     assert "measured" in cp.summary()
-    # embeddings are quantize-applied, never packed
+    # embeddings ride their own packed-gather lane — not in packed_paths
+    # (those are projections), and no longer served dense
     assert all("embed" not in p for p in cp.packed_paths)
-    assert any("embed" in p for p in cp.quantized_paths)
+    assert cp.embed_paths == ["embed"]
+    assert all("embed" not in p for p in cp.quantized_paths)
+    # the escape hatch keeps the old dense-quantized route
+    cp_dense = codr.compile_params(params,
+                                   codr.EncodeConfig(n_unique=N_UNIQUE),
+                                   pack_embeddings=False)
+    assert cp_dense.embed_paths == []
+    assert any("embed" in p for p in cp_dense.quantized_paths)

@@ -1,0 +1,140 @@
+"""Regenerate the golden-bitstream vectors under ``tests/golden/``.
+
+    PYTHONPATH=src python tools/regen_goldens.py
+
+The goldens freeze the on-disk/byte layout of every serialized format
+in the engine — RLE streams, fixed-width unique-index packs, int8 KV
+pages, and the packed checkpoint artifact — so an accidental encoding
+change fails ``tests/test_golden_formats.py`` byte-for-byte instead of
+silently corrupting every previously written artifact.
+
+If a format change is INTENTIONAL: bump ``CODR_FORMAT_VERSION`` in
+``src/repro/checkpoint/packed.py``, rerun this script, and say why in
+the PR.  bf16 arrays are stored as uint16 bit-pattern views (``.npz``
+cannot carry the dtype); the builders below are the single source of
+truth for both the goldens and the test's "current bytes" side.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "golden")
+
+
+def _bits(a: np.ndarray) -> np.ndarray:
+    """npz-safe bit-pattern view (bf16 → uint16; others unchanged)."""
+    if str(a.dtype) == "bfloat16":
+        return np.asarray(a).view(np.uint16)
+    return np.asarray(a)
+
+
+def build_rle_golden() -> dict[str, np.ndarray]:
+    """One UCR vector through ``rle.encode_vector``: all three stream
+    payloads plus their chosen params and exact bit counts."""
+    from repro.core import rle
+
+    unique_vals = np.array([-90, -17, -5, 3, 12, 101], np.int64)
+    reps = np.array([2, 1, 4, 3, 2, 1], np.int64)
+    # per-unique ascending positions, sum(reps)=13 indexes in [0, 24)
+    indexes = np.array([1, 20, 7, 0, 3, 9, 15, 2, 11, 23, 5, 18, 4],
+                       np.int64)
+    enc = rle.encode_vector(unique_vals, reps, indexes, vector_len=24)
+    out: dict[str, np.ndarray] = {}
+    for name, stream in (("deltas", enc.deltas), ("reps", enc.reps),
+                         ("indexes", enc.indexes)):
+        out[f"{name}_packed"] = np.asarray(stream.packed, np.uint8)
+        out[f"{name}_meta"] = np.array(
+            [stream.nbits, stream.param, stream.count, stream.mode_bits],
+            np.int64)
+    out["total_bits"] = np.array([enc.total_bits], np.int64)
+    return out
+
+
+def build_packed_weight_golden() -> dict[str, np.ndarray]:
+    """``pack_projection`` on a fixed matrix: the uint32 word stream,
+    the unique-value table bits, and the scale."""
+    from repro.core.codr_linear import pack_projection
+
+    rng = np.random.default_rng(7)
+    w = (rng.normal(size=(12, 10)) * 0.2).astype(np.float32)
+    pl = pack_projection(w, n_unique=16)
+    return {
+        "packed": _bits(pl.weight.packed),
+        "table": _bits(pl.weight.table),
+        "scale": _bits(pl.weight.scale),
+        "meta": np.array([pl.weight.bits, *pl.weight.shape,
+                          pl.out_features], np.int64),
+    }
+
+
+def build_paged_kv_golden() -> dict[str, np.ndarray]:
+    """A deterministic int8 paged-KV write sequence: final page bytes
+    and per-page scales after 10 token writes over 2 slots."""
+    import jax.numpy as jnp
+
+    from repro.models import cache
+
+    spec = cache.PagedSpec(page_size=4, max_len=12, n_slots=2,
+                           kv_dtype="int8")
+    pkv = cache.paged_kv_init(spec, (2, 3))
+    table = np.arange(1, 1 + 2 * spec.max_pages,
+                      dtype=np.int32).reshape(2, spec.max_pages)
+    pkv = cache.set_tables(pkv, jnp.asarray(table))
+    rng = np.random.default_rng(21)
+    for t in range(10):
+        row = rng.normal(size=(2, 1, 2, 3)).astype(np.float32)
+        pkv = pkv.update(jnp.asarray(row, jnp.bfloat16), jnp.int32(t))
+    return {
+        "data": np.asarray(pkv.data),
+        "scale": np.asarray(pkv.scale),
+        "table": np.asarray(pkv.table),
+    }
+
+
+def build_checkpoint_golden() -> dict[str, np.ndarray]:
+    """The packed checkpoint manifest + array bytes for a tiny
+    deterministic params tree (one projection, one embedding, one dense
+    leaf) — the full artifact byte layout, filesystem-free."""
+    import json
+
+    import repro.api as codr
+    from repro.checkpoint.packed import build_manifest
+
+    rng = np.random.default_rng(3)
+    params = {
+        "blk": {"q_proj": (rng.normal(size=(16, 12)) * 0.1
+                           ).astype(np.float32)},
+        "embed": (rng.normal(size=(24, 8)) * 0.1).astype(np.float32),
+        "norm": np.ones((12,), np.float32),
+    }
+    cp = codr.compile_params(params, codr.EncodeConfig(n_unique=16),
+                             min_size=0, sample_rows=None)
+    manifest, arrays = build_manifest(cp)
+    out = {"manifest": np.frombuffer(
+        json.dumps(manifest, indent=1).encode(), np.uint8)}
+    for i, a in enumerate(arrays):
+        out[f"arr_{i}"] = _bits(a)
+    return out
+
+
+BUILDERS = {
+    "rle_stream": build_rle_golden,
+    "packed_weight": build_packed_weight_golden,
+    "paged_kv_int8": build_paged_kv_golden,
+    "packed_checkpoint": build_checkpoint_golden,
+}
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, build in BUILDERS.items():
+        path = os.path.join(GOLDEN_DIR, f"{name}.npz")
+        np.savez(path, **build())
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()
