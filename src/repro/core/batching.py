@@ -208,8 +208,8 @@ class ContinuousBatcher(AsyncWorkerLoop):
                 kv_dtype=kv_dtype, n_pages=kv_pages)
             self._paged.total_pages     # validate geometry up front
             self._page_pool = cache_mod.PagePool(self._paged)
-            self._slot_pages: list[list[int] | None] = [None] * n_slots
-            self._kv_table = np.zeros((n_slots, self._paged.max_pages),
+            self._slot_pages: list[list[int] | None] = [None] * n_slots  # guarded-by: _cv
+            self._kv_table = np.zeros((n_slots, self._paged.max_pages),  # guarded-by: _cv
                                       np.int32)
             self._write_fn = jax.jit(
                 lambda pool, c, slot, pages: cache_mod.write_slot_paged(
@@ -230,18 +230,18 @@ class ContinuousBatcher(AsyncWorkerLoop):
                 lambda pool, c, slot: cache_mod.write_slot(
                     pool, c, slot, self._axes))
             self._pool = self._api.init_cache(cfg, n_slots, max_len)
-        self._slots: list[_Slot | None] = [None] * n_slots
-        self._pending: list[_Pending] = []
-        self._next_id = 0
-        self._abort_active = False
-        self._last_admit_t: float | None = None
+        self._slots: list[_Slot | None] = [None] * n_slots  # guarded-by: _cv
+        self._pending: list[_Pending] = []  # guarded-by: _cv
+        self._next_id = 0                   # guarded-by: _cv
+        self._abort_active = False          # guarded-by: _cv
+        self._last_admit_t: float | None = None   # guarded-by: _cv
         # stats (written by the worker under _cv)
-        self.steps_run = 0
-        self.prefills_run = 0
-        self.requests_finished = 0
-        self.peak_active = 0
-        self.requests_shed = 0              # rejected at admission
-        self.requests_expired = 0           # deadline passed
+        self.steps_run = 0                  # guarded-by: _cv
+        self.prefills_run = 0               # guarded-by: _cv
+        self.requests_finished = 0          # guarded-by: _cv
+        self.peak_active = 0                # guarded-by: _cv
+        self.requests_shed = 0              # guarded-by: _cv
+        self.requests_expired = 0           # guarded-by: _cv
 
     # -- submission ---------------------------------------------------------
     def submit(self, prompt, *, max_new_tokens: int = 16,
@@ -415,7 +415,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
                     if (not self._pending
                             and not any(s is not None for s in self._slots)):
                         return                      # drained
-                admits: list[tuple[int, _Pending]] = []
+                admits: list[tuple[int, _Pending, np.ndarray | None]] = []
                 for _ in range(self.prefill_per_step):
                     free = [i for i, s in enumerate(self._slots)
                             if s is None]
@@ -439,31 +439,35 @@ class ContinuousBatcher(AsyncWorkerLoop):
                     # budget — all-or-nothing, so a request can never
                     # run out of pages mid-stream) under the lock;
                     # prefill happens outside it
+                    kv_row = None
                     if self._paged is not None:
                         need = self._paged.pages_for(
                             req.prompt.size + req.max_new_tokens)
                         pages = self._page_pool.alloc(need)
                         assert pages is not None  # _pages_ok_locked held
                         self._slot_pages[free[0]] = pages
-                        row = np.full((self._paged.max_pages,),
-                                      self._cache_mod.SCRATCH_PAGE,
-                                      np.int32)
-                        row[:need] = pages
-                        self._kv_table[free[0]] = row
+                        kv_row = np.full((self._paged.max_pages,),
+                                         self._cache_mod.SCRATCH_PAGE,
+                                         np.int32)
+                        kv_row[:need] = pages
+                        self._kv_table[free[0]] = kv_row
                     self._slots[free[0]] = _Slot(
                         req.handle, req.eos_id, last_tok=-1,
                         pos=-1, n_gen=0, deadline=req.deadline)
-                    admits.append((free[0], req))
-            for slot_idx, req in admits:
-                self._admit(slot_idx, req)
+                    admits.append((free[0], req, kv_row))
+            for slot_idx, req, kv_row in admits:
+                self._admit(slot_idx, req, kv_row)
             self._decode_active()
 
     # -- worker internals ---------------------------------------------------
-    def _admit(self, slot_idx: int, req: _Pending) -> None:
+    def _admit(self, slot_idx: int, req: _Pending,
+               kv_row: np.ndarray | None = None) -> None:
         """Prefill one request and install it in its reserved slot.  A
         prefill failure (after any configured retries — re-running the
         prefill + slot write is idempotent) releases the slot and fails
-        only this handle."""
+        only this handle.  ``kv_row`` is the page-table row built while
+        the slot was reserved under ``_cv`` — passed in so the prefill
+        never reads ``self._kv_table`` outside the lock."""
 
         def _attempt():
             self._fire("batcher.prefill")
@@ -472,7 +476,7 @@ class ContinuousBatcher(AsyncWorkerLoop):
             if self._paged is not None:
                 self._pool = self._write_fn(
                     self._pool, cache, jnp.int32(slot_idx),
-                    jnp.asarray(self._kv_table[slot_idx]))
+                    jnp.asarray(kv_row))
             else:
                 self._pool = self._write_fn(self._pool, cache,
                                             jnp.int32(slot_idx))

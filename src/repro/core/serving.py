@@ -229,15 +229,15 @@ class AsyncWorkerLoop:
 
     def __init__(self) -> None:
         self._cv = threading.Condition()
-        self._worker: threading.Thread | None = None
-        self._stopping = False
+        self._worker: threading.Thread | None = None   # guarded-by: _cv
+        self._stopping = False                         # guarded-by: _cv
         # -- resilience (all optional; None ⇒ exact pre-resilience path)
         self._injector = None           # runtime.resilience.FaultInjector
         self._retry_policy = None       # runtime.resilience.RetryPolicy
         self._restart_policy = None     # runtime.resilience.RestartPolicy
         self._supervisor = None         # runtime.resilience.ServingSupervisor
-        self.worker_crashes = 0
-        self.worker_restarts = 0
+        self.worker_crashes = 0                        # guarded-by: _cv
+        self.worker_restarts = 0                       # guarded-by: _cv
 
     # -- subclass hooks -----------------------------------------------------
     def _loop(self) -> None:
@@ -337,13 +337,13 @@ class AsyncWorkerLoop:
         inside a ``Future`` done-callback, which runs on the worker
         thread) — that raises ``RuntimeError`` without corrupting state.
         """
-        if self._worker is threading.current_thread():
-            raise RuntimeError(
-                f"stop_async called from the {self._thread_name} worker "
-                "itself (done callbacks run on the worker thread) — stop "
-                "from another thread")
         with self._cv:
             worker = self._worker
+            if worker is threading.current_thread():
+                raise RuntimeError(
+                    f"stop_async called from the {self._thread_name} "
+                    "worker itself (done callbacks run on the worker "
+                    "thread) — stop from another thread")
             self._stopping = True
             if not drain:
                 self._cancel_pending_locked()
@@ -461,19 +461,19 @@ class CodrBatchServer(AsyncWorkerLoop):
         self.max_batch = max_batch
         self.flush_deadline_s = flush_deadline_s
         self.max_pending = max_pending      # bounded admission (None=∞)
-        self._queue: list[tuple[np.ndarray, float | None]] = []
-        self._next_id = 0                   # monotonic request-id counter
-        self.batches_run = 0
-        self.requests_served = 0
-        self.bucket_counts: dict[int, int] = {}   # batch bucket → dispatches
+        self._queue: list[tuple[np.ndarray, float | None]] = []  # guarded-by: _cv
+        self._next_id = 0                   # guarded-by: _cv
+        self.batches_run = 0                # guarded-by: _cv
+        self.requests_served = 0            # guarded-by: _cv
+        self.bucket_counts: dict[int, int] = {}   # guarded-by: _cv
         # -- resilience accounting (docs/DESIGN.md §3.5) ----------------
-        self.requests_shed = 0              # rejected at admission
-        self.requests_expired = 0           # deadline passed pre-dispatch
-        self.requests_quarantined = 0       # consumed after retry budget
-        self.quarantined: list[dict] = []   # bounded quarantine log
+        self.requests_shed = 0              # guarded-by: _cv
+        self.requests_expired = 0           # guarded-by: _cv
+        self.requests_quarantined = 0       # guarded-by: _cv
+        self.quarantined: list[dict] = []   # guarded-by: _cv
         # -- async state ------------------------------------------------
-        self._async_queue: list[_AsyncReq] = []
-        self._oldest_t: float | None = None     # submit time of queue head
+        self._async_queue: list[_AsyncReq] = []   # guarded-by: _cv
+        self._oldest_t: float | None = None       # guarded-by: _cv
 
     def _bucket(self, n_real: int) -> int:
         b = 1
@@ -841,6 +841,7 @@ def _try_device_put(batch: np.ndarray):
     array (the dispatch then transfers synchronously, still correct)."""
     try:
         return jax.device_put(jnp.asarray(batch))
+    # codrlint: disable=exception-hygiene — deliberate fallback: any device_put failure degrades to the host array; dispatch stays correct, just synchronous
     except Exception:                   # pragma: no cover — defensive
         return batch
 

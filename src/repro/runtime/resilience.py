@@ -264,9 +264,9 @@ class FaultInjector:
     def __init__(self, plan: FaultPlan):
         self.plan = plan
         self._by_site = plan.by_site()
-        self._counts: dict[str, int] = {}
+        self._counts: dict[str, int] = {}   # guarded-by: _lock
         self._lock = threading.Lock()
-        self.fired: list[Fault] = []
+        self.fired: list[Fault] = []        # guarded-by: _lock
 
     def calls(self, site: str) -> int:
         with self._lock:
@@ -426,16 +426,16 @@ class ServingSupervisor:
         from repro.core import backends as _backends
         self._lock = threading.Lock()
         self._base = _backends.resolve(backend)
-        self._backend = self._base
+        self._backend = self._base          # guarded-by: _lock
         self.fallback = fallback
         self.warmup = max(1, warmup)
         self.monitor = StragglerMonitor(
             4, monitor_cfg or StragglerConfig(patience=4))
-        self._warm: list[float] = []
-        self._baseline: float | None = None
-        self.history: list[dict] = []
-        self.degradations = 0
-        self._exhausted = False
+        self._warm: list[float] = []        # guarded-by: _lock
+        self._baseline: float | None = None  # guarded-by: _lock
+        self.history: list[dict] = []       # guarded-by: _lock
+        self.degradations = 0               # guarded-by: _lock
+        self._exhausted = False             # guarded-by: _lock
         devices = self._lane_devices()
         hosts = HostSet(n_hosts=len(devices), chips_per_host=1,
                         healthy=np.ones(len(devices), dtype=bool))

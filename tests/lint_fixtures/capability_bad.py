@@ -1,0 +1,36 @@
+"""codrlint fixture: Backend subclasses whose caps lie.
+
+Never imported — Backend/BackendCaps are resolved statically by name.
+"""
+
+
+class NoNameBackend(Backend):                       # noqa: F821
+    caps = BackendCaps(packed_matmul=False)         # noqa: F821
+
+    def matmul(self, a, b):                 # override without the flag
+        return a @ b
+
+
+class DeadKindBackend(Backend):                     # noqa: F821
+    name = "fixture-dead"
+    caps = BackendCaps(packed_matmul=True,          # noqa: F821
+                       native_kinds=frozenset({"gather"}))
+
+    def matmul(self, a, b):
+        return a @ b
+
+    def gather(self, table, idx):
+        raise NotImplementedError           # claimed native, cannot run
+
+
+class DupNameA(Backend):                            # noqa: F821
+    name = "fixture-dup"
+    caps = BackendCaps(packed_matmul=False)         # noqa: F821
+
+
+class DupNameB(Backend):                            # noqa: F821
+    name = "fixture-dup"
+    caps = BackendCaps(packed_matmul=False)         # noqa: F821
+
+
+KERNEL_CAPS = {"kinds": ("conv",)}      # missing required keys

@@ -1,0 +1,34 @@
+"""codrlint fixture: a Backend subclass whose caps are honest."""
+
+
+class GoodBackend(Backend):                         # noqa: F821
+    name = "fixture-good"
+    caps = BackendCaps(packed_matmul=True,          # noqa: F821
+                       native_kinds=frozenset({"conv"}))
+
+    def matmul(self, a, b):
+        return a @ b
+
+    def conv(self, x, w):
+        return x
+
+
+class DynamicCapsBackend(Backend):                  # noqa: F821
+    """Lazy caps property — flag checks are skipped by design; the
+    KERNEL_CAPS shape rule covers its source of truth instead."""
+
+    name = "fixture-dynamic"
+
+    @property
+    def caps(self):
+        return resolve_caps(KERNEL_CAPS)            # noqa: F821
+
+    def matmul(self, a, b):
+        return a @ b
+
+
+KERNEL_CAPS = {
+    "kinds": ("conv", "matmul"),
+    "integer_activations": True,
+    "description": "fixture kernel capability table",
+}

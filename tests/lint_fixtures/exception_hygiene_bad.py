@@ -1,0 +1,22 @@
+"""codrlint fixture: silent swallows of broad exception classes."""
+
+
+def swallow():
+    try:
+        risky()                     # noqa: F821
+    except Exception:
+        pass                        # silent swallow
+
+
+def bare():
+    try:
+        risky()                     # noqa: F821
+    except:                         # noqa: E722 — bare except
+        return None
+
+
+def tuple_swallow():
+    try:
+        risky()                     # noqa: F821
+    except (ValueError, BaseException):
+        return -1                   # swallow via tuple member

@@ -1,0 +1,33 @@
+"""codrlint fixture: broad catches that re-raise, deliver, or log."""
+import logging
+
+log = logging.getLogger(__name__)
+
+
+def reraises():
+    try:
+        risky()                     # noqa: F821
+    except Exception:
+        raise
+
+
+def uses_bound(handle):
+    try:
+        risky()                     # noqa: F821
+    except Exception as e:
+        handle.fail(e)              # delivered, not swallowed
+
+
+def logs():
+    try:
+        risky()                     # noqa: F821
+    except Exception:
+        log.warning("risky() failed; degrading")
+        return None
+
+
+def narrow():
+    try:
+        risky()                     # noqa: F821
+    except ValueError:
+        return 0                    # narrow catch — out of scope

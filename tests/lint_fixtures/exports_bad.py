@@ -1,0 +1,8 @@
+"""codrlint fixture: stale __all__ entry and a dangling re-export."""
+from repro.core.serving import NoSuchSymbolXYZ  # noqa: F401 — dangling
+
+__all__ = ["exported_fn", "never_defined_name"]
+
+
+def exported_fn():
+    return 1

@@ -1,0 +1,8 @@
+"""codrlint fixture: resolving re-export and an accurate __all__."""
+from repro.core.serving import CodrBatchServer  # noqa: F401
+
+__all__ = ["CodrBatchServer", "exported_fn"]
+
+
+def exported_fn():
+    return 2

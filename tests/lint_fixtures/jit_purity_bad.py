@@ -1,0 +1,31 @@
+"""codrlint fixture: every traced body here violates jit-purity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import time
+
+
+@jax.jit
+def bad_decorated(x):
+    y = np.asarray(x)               # host NumPy inside the trace
+    print("tracing")                # host sync
+    return jnp.sum(y)
+
+
+@jax.jit
+def bad_coercions(x):
+    v = float(x)                    # device sync
+    n = x.item()                    # device sync
+    return v + n
+
+
+def bad_scan(xs):
+    def body(carry, x):
+        t = time.monotonic()        # wall clock burned into the trace
+        carry.count = 1             # attribute mutation side effect
+        return carry + x, t
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def bad_lambda(x):
+    return jax.jit(lambda t: np.square(t))(x)

@@ -1,0 +1,27 @@
+"""codrlint fixture: traced bodies that are pure (or properly escaped)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def good_decorated(x):
+    return jnp.sum(x * 2)
+
+
+@jax.jit
+def good_escape_hatch(x):
+    # sanctioned host compute: concrete at trace time by construction
+    with jax.ensure_compile_time_eval():
+        bias = jnp.asarray(np.ones(3, np.float32))
+    return x + bias
+
+
+def good_scan(xs):
+    def body(carry, x):
+        return carry + x, carry
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def host_helper(x):
+    return np.asarray(x)            # never traced — host code is fine

@@ -1,0 +1,24 @@
+"""codrlint fixture: guarded attributes touched without the lock."""
+import threading
+
+
+class Loop:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._queue = []            # guarded-by: _cv
+        self.count = 0              # guarded-by: _cv
+
+    def bad_read(self):
+        return len(self._queue)     # no lock held
+
+    def bad_partial(self):
+        with self._cv:
+            self._queue.append(1)   # fine here
+        self.count += 1             # lock already released
+
+
+class Child(Loop):
+    """Inherits the guarded set from Loop (cross-class resolution)."""
+
+    def bad_inherited(self):
+        self._queue.clear()         # guard inherited from Loop

@@ -1,0 +1,29 @@
+"""codrlint fixture: guarded attributes accessed per the convention."""
+import threading
+
+
+class Loop:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._queue = []            # guarded-by: _cv
+        self.count = 0              # guarded-by: _cv
+
+    def ok_locked_block(self):
+        with self._cv:
+            self._queue.append(1)
+            self.count += 1
+
+    def _drain_locked(self):
+        # *_locked suffix: caller holds the lock by convention
+        n = len(self._queue)
+        self._queue.clear()
+        return n
+
+    def unrelated(self):
+        return threading.active_count()
+
+
+class Child(Loop):
+    def ok_inherited(self):
+        with self._cv:
+            return list(self._queue)

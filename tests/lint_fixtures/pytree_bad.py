@@ -1,0 +1,16 @@
+"""codrlint fixture: jit-crossing dataclasses missing registration."""
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass
+class UnregisteredLeaf:
+    data: jax.Array                 # array field ⇒ registration required
+    scale: float = 1.0
+
+
+@dataclasses.dataclass
+class WrapsLeaf:
+    inner: UnregisteredLeaf         # transitively required
+    label: str = ""

@@ -1,0 +1,34 @@
+"""codrlint fixture: registered leaves and exempt host containers."""
+import dataclasses
+
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RegisteredLeaf:
+    data: jax.Array
+
+    def tree_flatten(self):
+        return (self.data,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass
+class CallRegisteredLeaf:
+    data: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    CallRegisteredLeaf,
+    lambda v: ((v.data,), None),
+    lambda aux, ch: CallRegisteredLeaf(*ch))
+
+
+@dataclasses.dataclass
+class HostOnlyPool:
+    free_pages: list                # no array fields — stays host-side
+    page_size: int = 16

@@ -1,0 +1,16 @@
+"""codrlint fixture: suppressions carrying a reviewable rationale."""
+
+
+def swallow_same_line():
+    try:
+        risky()                     # noqa: F821
+    except Exception:  # codrlint: disable=exception-hygiene — fixture: deliberate swallow proving same-line suppression
+        pass
+
+
+def swallow_line_above():
+    try:
+        risky()                     # noqa: F821
+    # codrlint: disable=exception-hygiene — fixture: deliberate swallow proving comment-above suppression
+    except Exception:
+        pass

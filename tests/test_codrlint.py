@@ -1,0 +1,172 @@
+"""codrlint: fixture-driven checker tests + the repo-must-be-clean gate.
+
+Each checker has a paired bad/good fixture under ``tests/lint_fixtures``
+(a directory the linter's own discovery excludes — fixtures are linted
+here by explicit file path).  The gate test at the bottom is tier-1: a
+guarded-by violation or an ``np.asarray`` inside a jitted body anywhere
+in ``src``/``tools`` fails the suite, not just the CI lint step.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:           # tests/ is sys.path[0], not repo root
+    sys.path.insert(0, str(REPO))
+
+from tools.codrlint import run, registered_checkers  # noqa: E402
+
+FIXTURES = REPO / "tests" / "lint_fixtures"
+
+EXPECTED_CHECKERS = {"jit-purity", "lock-discipline",
+                     "capability-consistency", "pytree-registration",
+                     "export-surface", "exception-hygiene"}
+
+
+def lint(*names, only=None):
+    """Lint fixture files by explicit path, baseline disabled."""
+    paths = tuple(str(FIXTURES / n) for n in names)
+    return run(paths, root=REPO, baseline=False, only=only)
+
+
+def test_all_checkers_registered():
+    assert EXPECTED_CHECKERS <= set(registered_checkers())
+
+
+# -- one bad + one good fixture per checker ------------------------------
+
+@pytest.mark.parametrize("check,bad,good,min_findings", [
+    ("jit-purity", "jit_purity_bad.py", "jit_purity_good.py", 7),
+    ("lock-discipline", "lock_discipline_bad.py",
+     "lock_discipline_good.py", 3),
+    ("capability-consistency", "capability_bad.py",
+     "capability_good.py", 5),
+    ("pytree-registration", "pytree_bad.py", "pytree_good.py", 2),
+    ("export-surface", "exports_bad.py", "exports_good.py", 2),
+    ("exception-hygiene", "exception_hygiene_bad.py",
+     "exception_hygiene_good.py", 3),
+])
+def test_checker_fires_on_bad_not_on_good(check, bad, good, min_findings):
+    rb = lint(bad, only=(check,))
+    assert not rb.ok
+    assert len(rb.findings) >= min_findings
+    assert all(f.check == check for f in rb.findings)
+    assert all(f.key and str(f.line) not in f.key.split(":")
+               for f in rb.findings), "keys must be line-number free"
+    rg = lint(good, only=(check,))
+    assert rg.ok, [f.format() for f in rg.findings]
+
+
+def test_jit_purity_specifics():
+    r = lint("jit_purity_bad.py", only=("jit-purity",))
+    # decorated fn, coercions, scan body by name, and the lambda form
+    # (the owner prefix may itself contain colons — match by suffix)
+    for what in ("np.asarray", "print", "float", "item",
+                 "time.monotonic", "set:count", "np.square"):
+        assert any(f.key.endswith(":" + what) for f in r.findings), what
+
+
+def test_lock_discipline_inheritance_crosses_classes():
+    r = lint("lock_discipline_bad.py", only=("lock-discipline",))
+    keys = {f.key for f in r.findings}
+    assert "Child.bad_inherited:_queue" in keys  # guard declared in Loop
+
+
+def test_exports_resolve_against_real_source_tree():
+    r = lint("exports_bad.py", only=("export-surface",))
+    keys = {f.key for f in r.findings}
+    assert "import:repro.core.serving.NoSuchSymbolXYZ" in keys
+    assert "__all__:never_defined_name" in keys
+
+
+# -- suppressions --------------------------------------------------------
+
+def test_suppression_without_rationale_is_itself_a_finding():
+    r = lint("suppression_bad.py")
+    assert not r.ok
+    assert len(r.bad_suppressions) == 1
+    assert r.bad_suppressions[0].check == "bad-suppression"
+    assert not r.findings            # the original finding was consumed
+
+
+def test_suppression_with_rationale_silences_same_line_and_above():
+    r = lint("suppression_good.py")
+    assert r.ok
+    assert r.suppressed == 2
+
+
+# -- baseline mechanism --------------------------------------------------
+
+def test_baseline_grandfathers_and_reports_stale(tmp_path):
+    live = lint("exception_hygiene_bad.py")
+    assert live.findings
+    fps = [f.fingerprint for f in live.findings]
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps(fps + ["exception-hygiene:gone.py:ghost"]))
+    r = run((str(FIXTURES / "exception_hygiene_bad.py"),),
+            root=REPO, baseline=base)
+    assert r.ok
+    assert r.baselined == len(fps)
+    assert r.stale_baseline == ["exception-hygiene:gone.py:ghost"]
+
+
+def test_fingerprints_are_line_free_and_stable():
+    a = lint("pytree_bad.py")
+    b = lint("pytree_bad.py")
+    assert [f.fingerprint for f in a.findings] == \
+        [f.fingerprint for f in b.findings]
+    assert all(str(f.line) not in f.fingerprint.rsplit(":", 1)[-1]
+               for f in a.findings)
+
+
+# -- CLI -----------------------------------------------------------------
+
+def test_cli_exit_codes_and_json_report(tmp_path):
+    out = tmp_path / "codrlint.json"
+    bad = subprocess.run(
+        [sys.executable, "-m", "tools.codrlint", "--no-baseline",
+         "--json", str(out),
+         str(FIXTURES / "exception_hygiene_bad.py")],
+        cwd=REPO, capture_output=True, text=True)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    payload = json.loads(out.read_text())
+    assert payload["ok"] is False and len(payload["findings"]) >= 3
+    good = subprocess.run(
+        [sys.executable, "-m", "tools.codrlint", "--no-baseline",
+         str(FIXTURES / "exception_hygiene_good.py")],
+        cwd=REPO, capture_output=True, text=True)
+    assert good.returncode == 0, good.stdout + good.stderr
+
+
+def test_cli_rejects_unknown_checker():
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.codrlint", "--only", "no-such-check"],
+        cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 2
+    assert "unknown checker" in r.stderr
+
+
+# -- the tier-1 gate: the live repo must be clean ------------------------
+
+def test_repo_is_codrlint_clean():
+    r = run(("src", "tools"), root=REPO)
+    msgs = [f.format() for f in r.findings + r.bad_suppressions]
+    assert r.ok, "codrlint violations in the repo:\n" + "\n".join(msgs)
+    assert not r.stale_baseline, (
+        "baseline.json lists fingerprints no longer observed — prune: "
+        f"{r.stale_baseline}")
+
+
+def test_injected_violation_fails_the_gate(tmp_path):
+    """Acceptance check from the issue: a fresh np.asarray inside a
+    jitted body (or a guarded-by breach) must be caught."""
+    src = tmp_path / "injected.py"
+    src.write_text(
+        "import jax\nimport numpy as np\n\n"
+        "@jax.jit\ndef f(x):\n    return np.asarray(x)\n")
+    r = run((str(src),), root=tmp_path, baseline=False)
+    assert not r.ok
+    assert r.findings[0].check == "jit-purity"

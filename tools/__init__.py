@@ -1,0 +1,2 @@
+"""Repo tooling package (``python -m tools.codrlint`` needs it to be a
+regular package; the standalone scripts keep working unchanged)."""

@@ -7,8 +7,9 @@ like ``docs/DESIGN.md §2`` in docstrings/comments — and fails (exit 1)
 listing every reference that does not resolve.  A reference resolves if
 the target exists relative to the referencing file's directory, the repo
 root, or ``docs/``.  Section references into ``docs/DESIGN.md``
-(``DESIGN.md §N``) are additionally checked against the ``## §N``
-headings that actually exist.
+(``DESIGN.md §N`` and subsection forms like ``§3.5``) are additionally
+checked against the ``## §N`` / ``### §N.M`` headings that actually
+exist.
 
 This is the guard against the failure mode this repo actually had:
 module docstrings citing a ``DESIGN.md §2`` that was never written.
@@ -31,7 +32,7 @@ SKIP = {"SNIPPETS.md", "ISSUE.md", "CHANGES.md"}
 
 MD_TOKEN = re.compile(r"[A-Za-z0-9_./-]*[A-Za-z0-9_]\.md\b")
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+\.md)(#[^)]*)?\)")
-SECTION_REF = re.compile(r"DESIGN\.md\s*§(\d+)")
+SECTION_REF = re.compile(r"DESIGN\.md[`]*\s*§(\d+(?:\.\d+)*)")
 
 
 def files_to_scan():
@@ -61,7 +62,7 @@ def design_sections() -> set[str]:
     design = ROOT / "docs" / "DESIGN.md"
     if not design.exists():
         return set()
-    return set(re.findall(r"^##+\s*§(\d+)", design.read_text(),
+    return set(re.findall(r"^##+\s*§(\d+(?:\.\d+)*)", design.read_text(),
                           flags=re.M))
 
 

@@ -1,0 +1,35 @@
+"""codrlint — repo-specific static invariant checker (docs/DESIGN.md §7).
+
+An AST-based, plugin-style analysis suite pinning the conventions the
+codebase otherwise holds only in prose:
+
+==========================  =============================================
+check                       invariant
+==========================  =============================================
+``jit-purity``              no host sync (np.*, .item(), float()/int(),
+                            print, attribute mutation) inside functions
+                            traced by jit/scan/shard_map/pallas_call
+``lock-discipline``         ``# guarded-by: <lock>`` attributes only
+                            touched under ``with self.<lock>:`` or in
+                            ``*_locked`` methods
+``capability-consistency``  Backend subclasses implement what their
+                            BackendCaps/KERNEL_CAPS flags claim
+``pytree-registration``     jit-crossing leaf dataclasses are
+                            pytree-registered
+``export-surface``          ``__all__`` names bound; first-party
+                            re-exports resolve
+``exception-hygiene``       broad catches re-raise, deliver, or log —
+                            never silently swallow
+==========================  =============================================
+
+Run ``python -m tools.codrlint [--json] [paths]`` (default: ``src
+tools``).  Inline suppressions require a rationale; grandfathered
+findings live in ``tools/codrlint/baseline.json``.
+"""
+from tools.codrlint.core import (DEFAULT_PATHS, Checker,  # noqa: F401
+                                 Finding, ModuleInfo, Project, Report,
+                                 register_checker, registered_checkers, run)
+
+__all__ = ["Checker", "Finding", "ModuleInfo", "Project", "Report",
+           "DEFAULT_PATHS", "register_checker", "registered_checkers",
+           "run"]

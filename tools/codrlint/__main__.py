@@ -1,0 +1,74 @@
+"""CLI: ``python -m tools.codrlint [--json FILE|-] [--baseline FILE]
+[--only check,check] [--no-baseline] [paths...]``
+
+Exit codes: 0 clean (or fully baselined/suppressed), 1 findings, 2 bad
+usage.  ``--json`` writes the machine-readable report (CI uploads it as
+an artifact next to ``coverage.xml``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from tools.codrlint.core import (DEFAULT_PATHS, registered_checkers, run)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.codrlint",
+        description="CoDR repo static invariant checker")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files/directories to lint (default: src tools)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write a JSON report to FILE ('-' for stdout)")
+    ap.add_argument("--baseline", metavar="FILE", default=None,
+                    help="baseline file (default: tools/codrlint/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report every finding")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated checker subset")
+    ap.add_argument("--list-checks", action="store_true",
+                    help="list registered checkers and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_checks:
+        for name, c in sorted(registered_checkers().items()):
+            print(f"{name:<24} {c.description}")
+        return 0
+
+    only = tuple(s.strip() for s in args.only.split(",")) \
+        if args.only else None
+    baseline = False if args.no_baseline else (
+        pathlib.Path(args.baseline) if args.baseline else None)
+    try:
+        report = run(tuple(args.paths) or DEFAULT_PATHS,
+                     baseline=baseline, only=only)
+    except ValueError as e:
+        print(f"codrlint: {e}", file=sys.stderr)
+        return 2
+
+    if args.json:
+        payload = json.dumps(report.to_json(), indent=1)
+        if args.json == "-":
+            print(payload)
+        else:
+            pathlib.Path(args.json).write_text(payload + "\n")
+
+    for f in report.bad_suppressions:
+        print(f.format())
+    for f in report.findings:
+        print(f.format())
+    for fp in report.stale_baseline:
+        print(f"note: stale baseline entry (no longer observed): {fp}")
+    n = len(report.findings) + len(report.bad_suppressions)
+    status = "OK" if report.ok else f"{n} finding(s)"
+    print(f"codrlint: {status} — {report.checked_files} file(s), "
+          f"{report.suppressed} suppressed, {report.baselined} baselined")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

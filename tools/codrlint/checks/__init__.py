@@ -1,0 +1,8 @@
+"""codrlint checkers — importing this package registers them all
+(import-time registration, mirroring ``repro.core.backends``)."""
+from tools.codrlint.checks import (capability,  # noqa: F401
+                                   exception_hygiene, exports, jit_purity,
+                                   lock_discipline, pytree)
+
+__all__ = ["capability", "exception_hygiene", "exports", "jit_purity",
+           "lock_discipline", "pytree"]

@@ -1,0 +1,225 @@
+"""capability-consistency: Backend classes implement what their caps claim.
+
+The registry contract (``repro.core.backends``, docs/DESIGN.md §3.1)
+couples three things that only agree by convention: a backend's
+``BackendCaps`` flags, the methods it actually overrides, and the
+``KERNEL_CAPS`` dicts the kernel packages publish.  This checker pins
+the statically-checkable part of that contract:
+
+* **name** — every concrete ``Backend`` subclass must bind a non-empty
+  ``name`` (class literal or ``self.name = ...`` in ``__init__``); two
+  classes must not claim the same literal name (the registry would need
+  ``overwrite=True``, which is reserved for the elastic re-mesh rungs).
+* **matmul ⇒ packed_matmul** — a class that overrides ``matmul`` (the
+  packed-projection entry point) must declare ``packed_matmul=True`` in
+  its literal ``caps``; overriding the packed path while advertising
+  ``packed_matmul=False`` means ``compile_params`` will refuse a
+  backend that actually works (or worse, the flag lies the other way
+  after a refactor).
+* **dead native kind** — literal ``caps`` whose ``native_kinds``
+  include a kind whose method body is just ``raise NotImplementedError``
+  (claiming a path that cannot execute).
+* **KERNEL_CAPS shape** — every ``KERNEL_CAPS`` dict literal must carry
+  the keys the lazy caps properties consume (``kinds``,
+  ``integer_activations``, ``description``).
+
+Classes whose ``caps`` is computed (a property resolving KERNEL_CAPS
+lazily) are skipped by the flag checks — the KERNEL_CAPS shape check
+covers their source of truth instead.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.codrlint.core import (Checker, Finding, ModuleInfo, Project,
+                                 dotted_name, literal_or_none,
+                                 register_checker)
+
+BACKEND_ROOT = "Backend"
+KERNEL_CAPS_KEYS = {"kinds", "integer_activations", "description"}
+
+
+def _base_names(cls: ast.ClassDef) -> list[str]:
+    out = []
+    for b in cls.bases:
+        if isinstance(b, ast.Name):
+            out.append(b.id)
+        elif isinstance(b, ast.Attribute):
+            out.append(b.attr)
+    return out
+
+
+def _is_backend_subclass(cls_name: str, project: Project,
+                         seen=None) -> bool:
+    seen = seen or set()
+    if cls_name in seen:
+        return False
+    seen.add(cls_name)
+    for _, cls in project.class_index.get(cls_name, ()):
+        for b in _base_names(cls):
+            if b == BACKEND_ROOT or _is_backend_subclass(b, project, seen):
+                return True
+    return False
+
+
+def _class_literal(cls: ast.ClassDef, name: str) -> ast.AST | None:
+    for item in cls.body:
+        if isinstance(item, ast.Assign):
+            for t in item.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return item.value
+        elif (isinstance(item, ast.AnnAssign) and item.value is not None
+              and isinstance(item.target, ast.Name)
+              and item.target.id == name):
+            return item.value
+    return None
+
+
+def _caps_kwargs(value: ast.AST) -> dict | None:
+    """``BackendCaps(...)`` call → literal kwargs (non-literal values
+    dropped); None when caps is not a literal BackendCaps call."""
+    if not (isinstance(value, ast.Call)
+            and dotted_name(value.func).split(".")[-1] == "BackendCaps"):
+        return None
+    out = {}
+    for kw in value.keywords:
+        if kw.arg is None:
+            continue
+        lit = literal_or_none(kw.value)
+        if lit is None and isinstance(kw.value, ast.Call):
+            # frozenset({...}) — unwrap the one-arg literal
+            if dotted_name(kw.value.func) == "frozenset" and kw.value.args:
+                lit = literal_or_none(kw.value.args[0])
+        if lit is not None:
+            out[kw.arg] = lit
+    return out
+
+
+def _methods(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
+    return {i.name: i for i in cls.body
+            if isinstance(i, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _only_raises_not_implemented(fn: ast.FunctionDef) -> bool:
+    body = [s for s in fn.body
+            if not (isinstance(s, ast.Expr)
+                    and isinstance(s.value, ast.Constant))]  # drop docstring
+    if len(body) != 1 or not isinstance(body[0], ast.Raise):
+        return False
+    exc = body[0].exc
+    callee = exc.func if isinstance(exc, ast.Call) else exc
+    return dotted_name(callee).endswith("NotImplementedError")
+
+
+def _sets_name_in_init(cls: ast.ClassDef) -> bool:
+    init = _methods(cls).get("__init__")
+    if init is None:
+        return False
+    for node in ast.walk(init):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Attribute) and t.attr == "name"
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    return True
+    return False
+
+
+class CapabilityChecker(Checker):
+    name = "capability-consistency"
+    description = ("Backend subclasses: name set, matmul override ⇔ "
+                   "packed_matmul flag, no dead native kinds, KERNEL_CAPS "
+                   "dicts well-formed")
+
+    def finalize(self, project: Project):
+        findings: list[Finding] = []
+        names_seen: dict[str, tuple[str, int]] = {}
+        for cls_name, defs in sorted(project.class_index.items()):
+            if not _is_backend_subclass(cls_name, project):
+                continue
+            for mod, cls in defs:
+                findings.extend(self._check_backend(mod, cls, names_seen))
+        for mod in project.modules:
+            if mod.tree is None:
+                continue
+            findings.extend(self._check_kernel_caps(mod))
+        return findings
+
+    def _check_backend(self, mod: ModuleInfo, cls: ast.ClassDef,
+                       names_seen: dict) -> list[Finding]:
+        findings: list[Finding] = []
+        methods = _methods(cls)
+        # abstract intermediaries (no name, no caps, no registration)
+        # are tolerated only if they define no execution methods — the
+        # built-ins all bind a literal name
+        name_lit = literal_or_none(_class_literal(cls, "name") or
+                                   ast.Constant(value=None))
+        if not name_lit and not _sets_name_in_init(cls):
+            findings.append(Finding(
+                "capability-consistency", mod.rel, cls.lineno,
+                f"{cls.name}:name",
+                f"Backend subclass {cls.name} binds no non-empty 'name' "
+                f"(class literal or self.name in __init__) — it cannot "
+                f"be registered"))
+        elif isinstance(name_lit, str) and name_lit:
+            prev = names_seen.get(name_lit)
+            if prev is not None:
+                findings.append(Finding(
+                    "capability-consistency", mod.rel, cls.lineno,
+                    f"{cls.name}:dup-name",
+                    f"backend name {name_lit!r} claimed by both "
+                    f"{prev[0]} and {cls.name} — registry collision"))
+            else:
+                names_seen[name_lit] = (cls.name, cls.lineno)
+
+        caps = _caps_kwargs(_class_literal(cls, "caps") or
+                            ast.Constant(value=None))
+        if caps is None:
+            return findings                # dynamic caps → KERNEL_CAPS rule
+        if "matmul" in methods and not caps.get("packed_matmul", False):
+            findings.append(Finding(
+                "capability-consistency", mod.rel,
+                methods["matmul"].lineno, f"{cls.name}:matmul",
+                f"{cls.name} overrides matmul (the packed-projection "
+                f"entry point) but its BackendCaps does not declare "
+                f"packed_matmul=True — compile_params would reject it"))
+        native = caps.get("native_kinds")
+        if native:
+            for kind in sorted(native):
+                fn = methods.get(kind)
+                if fn is not None and _only_raises_not_implemented(fn):
+                    findings.append(Finding(
+                        "capability-consistency", mod.rel, fn.lineno,
+                        f"{cls.name}:dead-{kind}",
+                        f"{cls.name}.caps claims native kind {kind!r} "
+                        f"but .{kind}() only raises NotImplementedError"))
+        return findings
+
+    def _check_kernel_caps(self, mod: ModuleInfo) -> list[Finding]:
+        findings: list[Finding] = []
+        for node in mod.tree.body:
+            if not isinstance(node, ast.Assign):
+                continue
+            if not any(isinstance(t, ast.Name) and t.id == "KERNEL_CAPS"
+                       for t in node.targets):
+                continue
+            lit = literal_or_none(node.value)
+            if not isinstance(lit, dict):
+                findings.append(Finding(
+                    "capability-consistency", mod.rel, node.lineno,
+                    "KERNEL_CAPS:literal",
+                    "KERNEL_CAPS must be a literal dict (the lazy caps "
+                    "properties and this checker both read it statically)"))
+                continue
+            missing = KERNEL_CAPS_KEYS - set(lit)
+            if missing:
+                findings.append(Finding(
+                    "capability-consistency", mod.rel, node.lineno,
+                    "KERNEL_CAPS:keys",
+                    f"KERNEL_CAPS is missing required key(s) "
+                    f"{sorted(missing)} (consumed by the backend caps "
+                    f"properties)"))
+        return findings
+
+
+register_checker(CapabilityChecker())

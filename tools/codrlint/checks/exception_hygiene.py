@@ -1,0 +1,121 @@
+"""exception-hygiene: broad catches must re-raise, deliver, or log.
+
+The serving stack legitimately catches broad ``Exception`` at isolation
+boundaries — a poison batch must fail its own futures, not the worker.
+What it must never do is *swallow*: a handler that catches everything
+and uses none of it hides real failures (and PR 7's ``InjectedCrash``
+semantics depend on broad handlers being exactly ``Exception``-scoped
+so ``BaseException`` crashes escape to the supervision net).
+
+Flagged:
+
+* bare ``except:`` — always (it eats ``KeyboardInterrupt`` /
+  ``InjectedCrash``; catch ``Exception`` or, at a supervision net,
+  ``BaseException`` explicitly);
+* ``except Exception`` / ``except BaseException`` handlers that neither
+  **re-raise** (a ``raise`` statement anywhere in the handler), nor
+  **use the bound exception** (``except ... as e`` with ``e`` read in
+  the body — delivering it to a future/handle/record counts), nor
+  **log** (a call to ``warnings.warn`` / ``logging`` style
+  ``.warning/.error/.exception/...`` / ``print``).
+
+A deliberate swallow (e.g. a best-effort staging fallback) carries a
+``# codrlint: disable=exception-hygiene — <why>`` on the handler line.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.codrlint.core import (Checker, Finding, ModuleInfo, Project,
+                                 dotted_name, register_checker)
+
+BROAD = {"Exception", "BaseException"}
+LOG_ATTRS = {"warning", "error", "exception", "critical", "info", "debug",
+             "warn", "log"}
+
+
+def _broad_names(type_node: ast.AST | None) -> list[str]:
+    """Broad exception class names caught by this handler ([] if the
+    handler is narrow, ['<bare>'] for a bare except)."""
+    if type_node is None:
+        return ["<bare>"]
+    nodes = (type_node.elts if isinstance(type_node, ast.Tuple)
+             else [type_node])
+    out = []
+    for n in nodes:
+        name = dotted_name(n).split(".")[-1]
+        if name in BROAD:
+            out.append(name)
+    return out
+
+
+def _handler_ok(handler: ast.ExceptHandler) -> bool:
+    uses_bound = False
+    reraises = False
+    logs = False
+    bound = handler.name
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            reraises = True
+        elif (bound and isinstance(node, ast.Name) and node.id == bound
+                and isinstance(node.ctx, ast.Load)):
+            uses_bound = True
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            name = dotted_name(fn)
+            if name == "print":
+                logs = True
+            elif isinstance(fn, ast.Attribute) and fn.attr in LOG_ATTRS:
+                logs = True
+    return reraises or uses_bound or logs
+
+
+class ExceptionHygieneChecker(Checker):
+    name = "exception-hygiene"
+    description = ("bare excepts are banned; except Exception/"
+                   "BaseException must re-raise, use the bound exception, "
+                   "or log")
+
+    def check_module(self, mod: ModuleInfo, project: Project):
+        findings: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            broad = _broad_names(node.type)
+            if not broad:
+                continue
+            if "<bare>" in broad:
+                findings.append(Finding(
+                    "exception-hygiene", mod.rel, node.lineno,
+                    f"bare-except:{_context(mod, node)}",
+                    "bare 'except:' catches BaseException (incl. "
+                    "KeyboardInterrupt and injected crashes) — catch "
+                    "Exception, or BaseException explicitly at a "
+                    "supervision net"))
+                continue
+            if not _handler_ok(node):
+                findings.append(Finding(
+                    "exception-hygiene", mod.rel, node.lineno,
+                    f"swallow:{'-'.join(broad)}:{_context(mod, node)}",
+                    f"'except {' | '.join(broad)}' neither re-raises, "
+                    f"uses the bound exception, nor logs — a silent "
+                    f"swallow (narrow it, handle it, or suppress with "
+                    f"rationale)"))
+        return findings
+
+
+def _context(mod: ModuleInfo, node: ast.AST) -> str:
+    """Nearest enclosing def/class name for a stable baseline key."""
+    best = ""
+    best_line = -1
+    for outer in ast.walk(mod.tree):
+        if isinstance(outer, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+            if (outer.lineno <= node.lineno
+                    and getattr(outer, "end_lineno", 1 << 30) >= node.lineno
+                    and outer.lineno > best_line):
+                best, best_line = outer.name, outer.lineno
+    return best or "<module>"
+
+
+register_checker(ExceptionHygieneChecker())

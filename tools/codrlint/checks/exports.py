@@ -1,0 +1,129 @@
+"""export-surface: ``__all__`` matches and re-exports resolve.
+
+The package facades (``repro.api``, the subpackage ``__init__.py``
+files) promise a surface; nothing verified it.  Two rules:
+
+* every name in a module's ``__all__`` must be bound in that module
+  (defined, assigned, or imported) — a stale ``__all__`` entry breaks
+  ``from repro.x import *`` and lies to readers;
+* every ``from repro.x import y`` (absolute, first-party) must name a
+  ``y`` actually bound at the top level of ``repro/x`` — resolved
+  against the linted source tree, so a renamed symbol fails the lint
+  before it fails at import time in some lazy path.
+
+Third-party and relative imports are skipped (no source to resolve
+against); ``import repro.x`` module imports are checked only for the
+module file existing.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from tools.codrlint.core import (Checker, Finding, ModuleInfo, Project,
+                                 literal_or_none, register_checker,
+                                 top_level_bindings)
+
+FIRST_PARTY_ROOTS = ("repro", "tools")
+
+
+def _module_file(dotted: str, search_roots) -> pathlib.Path | None:
+    """Resolve a dotted module to its file, or to the package directory
+    itself for namespace packages (``src/repro`` has no ``__init__.py``)."""
+    rel = dotted.replace(".", "/")
+    for root in search_roots:
+        for cand in (root / f"{rel}.py", root / rel / "__init__.py"):
+            if cand.exists():
+                return cand
+        if (root / rel).is_dir():
+            return root / rel                  # namespace package
+    return None
+
+
+class ExportSurfaceChecker(Checker):
+    name = "export-surface"
+    description = ("__all__ names are bound; 'from repro.x import y' "
+                   "re-exports resolve against the source tree")
+
+    def check_module(self, mod: ModuleInfo, project: Project):
+        findings: list[Finding] = []
+        bound = top_level_bindings(mod.tree)
+        # rule 1: __all__ entries all bound
+        for node in mod.tree.body:
+            if (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "__all__"
+                            for t in node.targets)):
+                names = literal_or_none(node.value)
+                if not isinstance(names, (list, tuple)):
+                    findings.append(Finding(
+                        "export-surface", mod.rel, node.lineno,
+                        "__all__:literal",
+                        "__all__ must be a literal list/tuple of names"))
+                    continue
+                for n in names:
+                    if n not in bound:
+                        findings.append(Finding(
+                            "export-surface", mod.rel, node.lineno,
+                            f"__all__:{n}",
+                            f"__all__ lists {n!r} but the module never "
+                            f"binds it — stale export"))
+        # rule 2: first-party from-imports resolve
+        root = mod.path
+        for _ in mod.rel.split("/"):
+            root = root.parent                   # repo root
+        search_roots = (root / "src", root)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ImportFrom) or node.level:
+                continue
+            if not node.module:
+                continue
+            top = node.module.split(".")[0]
+            if top not in FIRST_PARTY_ROOTS:
+                continue
+            target = _module_file(node.module, search_roots)
+            if target is None:
+                findings.append(Finding(
+                    "export-surface", mod.rel, node.lineno,
+                    f"import:{node.module}",
+                    f"first-party module {node.module!r} not found in "
+                    f"the source tree"))
+                continue
+            if target.is_dir():
+                # namespace package: only submodules are importable from it
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    if not _module_file(f"{node.module}.{alias.name}",
+                                        search_roots):
+                        findings.append(Finding(
+                            "export-surface", mod.rel, node.lineno,
+                            f"import:{node.module}.{alias.name}",
+                            f"'from {node.module} import {alias.name}' — "
+                            f"no such submodule under the namespace "
+                            f"package {node.module!r}"))
+                continue
+            try:
+                t_bound = top_level_bindings(
+                    ast.parse(target.read_text(encoding="utf-8",
+                                               errors="replace")))
+            except SyntaxError:
+                continue                   # its own parse finding covers it
+            is_pkg_init = target.name == "__init__.py"
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                if alias.name in t_bound:
+                    continue
+                if is_pkg_init and _module_file(
+                        f"{node.module}.{alias.name}", search_roots):
+                    continue               # importing a submodule
+                findings.append(Finding(
+                    "export-surface", mod.rel, node.lineno,
+                    f"import:{node.module}.{alias.name}",
+                    f"'from {node.module} import {alias.name}' — "
+                    f"{alias.name!r} is not bound at the top level of "
+                    f"{node.module} (renamed or removed?)"))
+        return findings
+
+
+register_checker(ExportSurfaceChecker())

@@ -1,0 +1,178 @@
+"""jit-purity: no host synchronization inside traced function bodies.
+
+A function is *traced* when it is passed to ``jax.jit`` / ``shard_map``
+/ ``jax.lax.scan`` / ``pl.pallas_call`` (directly, as a lambda, or as a
+local ``def`` resolved by name within the file) or decorated with
+``@jax.jit`` / ``@partial(jax.jit, ...)``.  Inside such a body the
+checker flags operations that force a host sync or leak tracers
+(the latent bug class PR 3 fixed in ``engine._build_forward``):
+
+* ``np.*`` / ``numpy.*`` calls — host NumPy materializes the tracer;
+* ``.item()`` calls and ``float()`` / ``int()`` / ``bool()`` coercions;
+* ``print(...)`` — a host sync per trace (use ``jax.debug.print``);
+* ``time.*()`` calls — wall-clock reads burn into the trace;
+* attribute mutation (``obj.attr = ...``) — a side effect the trace
+  replays never, once, or per-retrace, all of them wrong.
+
+Statements under ``with jax.ensure_compile_time_eval():`` are exempt —
+that context is exactly the sanctioned host-compute escape hatch (the
+PR 3 fix uses it).  The analysis is one level deep by design: only the
+direct body of the traced function (including nested defs, which trace
+when called) is checked, not the transitive call graph — a documented
+soundness/noise trade-off (docs/DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.codrlint.core import (Checker, Finding, ModuleInfo, Project,
+                                 dotted_name, register_checker)
+
+JIT_WRAPPERS = {"jax.jit", "jit", "pjit", "jax.pjit"}
+SCAN_WRAPPERS = {"jax.lax.scan", "lax.scan"}
+SHARD_WRAPPERS = {"shard_map", "_shard_map", "jax.shard_map",
+                  "jax.experimental.shard_map.shard_map"}
+PALLAS_WRAPPERS = {"pl.pallas_call", "pallas_call",
+                   "jax.experimental.pallas.pallas_call"}
+HOST_MODULES = {"np", "numpy"}
+TIME_MODULES = {"time"}
+COERCIONS = {"float", "int", "bool"}
+ESCAPE_CTX = "ensure_compile_time_eval"
+
+
+def _is_jit_callable(node: ast.AST) -> str | None:
+    """Is ``node`` (the func of a Call) a tracing wrapper?  Returns the
+    wrapper family name or None."""
+    name = dotted_name(node)
+    if name in JIT_WRAPPERS:
+        return "jax.jit"
+    if name in SCAN_WRAPPERS:
+        return "lax.scan"
+    if name in SHARD_WRAPPERS:
+        return "shard_map"
+    if name in PALLAS_WRAPPERS:
+        return "pallas_call"
+    return None
+
+
+def _jit_decorator(dec: ast.AST) -> bool:
+    if dotted_name(dec) in JIT_WRAPPERS:
+        return True
+    if isinstance(dec, ast.Call):
+        fname = dotted_name(dec.func)
+        if fname in JIT_WRAPPERS:                      # @jax.jit(static...)
+            return True
+        if fname in {"partial", "functools.partial"} and dec.args:
+            return dotted_name(dec.args[0]) in JIT_WRAPPERS
+    return False
+
+
+class _BodyScanner(ast.NodeVisitor):
+    """Walk a traced body; collect impurity findings.  Skips subtrees
+    under ``with ...ensure_compile_time_eval():``."""
+
+    def __init__(self, mod: ModuleInfo, owner: str):
+        self.mod = mod
+        self.owner = owner
+        self.findings: list[Finding] = []
+
+    def _flag(self, node: ast.AST, what: str, detail: str) -> None:
+        self.findings.append(Finding(
+            "jit-purity", self.mod.rel, node.lineno,
+            f"{self.owner}:{what}",
+            f"{detail} inside traced function {self.owner!r} — host "
+            f"sync / trace side effect (wrap in "
+            f"jax.ensure_compile_time_eval() if this is deliberate "
+            f"trace-time compute)"))
+
+    def visit_With(self, node: ast.With) -> None:
+        for item in node.items:
+            expr = item.context_expr
+            callee = expr.func if isinstance(expr, ast.Call) else expr
+            if dotted_name(callee).split(".")[-1] == ESCAPE_CTX:
+                return                       # exempt whole block
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        name = dotted_name(func)
+        root = name.split(".")[0] if name else ""
+        if root in HOST_MODULES:
+            self._flag(node, name, f"host NumPy call {name}()")
+        elif root in TIME_MODULES:
+            self._flag(node, name, f"wall-clock call {name}()")
+        elif isinstance(func, ast.Attribute) and func.attr == "item":
+            self._flag(node, "item", "device-sync .item() call")
+        elif isinstance(func, ast.Name) and func.id in COERCIONS:
+            self._flag(node, func.id,
+                       f"host coercion {func.id}() on a traced value")
+        elif isinstance(func, ast.Name) and func.id == "print":
+            self._flag(node, "print",
+                       "print() traces as a host sync (jax.debug.print)")
+        self.generic_visit(node)
+
+    def _check_mutation(self, targets, node) -> None:
+        for t in targets:
+            if isinstance(t, ast.Attribute):
+                self._flag(node, f"set:{t.attr}",
+                           f"attribute mutation .{t.attr} = ...")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self._check_mutation(node.targets, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_mutation([node.target], node)
+        self.generic_visit(node)
+
+
+def _scan_body(mod: ModuleInfo, fn: ast.AST, owner: str) -> list[Finding]:
+    sc = _BodyScanner(mod, owner)
+    if isinstance(fn, ast.Lambda):
+        sc.visit(fn.body)
+    else:
+        for stmt in fn.body:
+            sc.visit(stmt)
+    return sc.findings
+
+
+class JitPurityChecker(Checker):
+    name = "jit-purity"
+    description = ("no host sync (np.*, .item(), float()/int(), print, "
+                   "attribute mutation) inside jit/scan/shard_map/pallas "
+                   "bodies")
+
+    def check_module(self, mod: ModuleInfo, project: Project):
+        findings: list[Finding] = []
+        # index every def in the file by name for by-name resolution
+        defs: dict[str, list[ast.FunctionDef]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+
+        seen: set[int] = set()          # id(fn-node) → scan once
+
+        def scan(fn: ast.AST, owner: str) -> None:
+            if id(fn) in seen:
+                return
+            seen.add(id(fn))
+            findings.extend(_scan_body(mod, fn, owner))
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_jit_decorator(d) for d in node.decorator_list):
+                    scan(node, node.name)
+            elif isinstance(node, ast.Call):
+                family = _is_jit_callable(node.func)
+                if family is None or not node.args:
+                    continue
+                target = node.args[0]
+                if isinstance(target, ast.Lambda):
+                    scan(target, f"<lambda@{family}:{target.lineno}>")
+                elif isinstance(target, ast.Name):
+                    for fn in defs.get(target.id, ()):
+                        scan(fn, fn.name)
+        return findings
+
+
+register_checker(JitPurityChecker())

@@ -1,0 +1,177 @@
+"""lock-discipline: a static race detector for the serving stack.
+
+Convention (docs/DESIGN.md §7): a shared attribute is declared guarded
+by annotating its initialization with a trailing comment::
+
+    self._queue = []        # guarded-by: _cv
+
+From then on, every ``self._queue`` access *anywhere in the class or
+its subclasses* must happen either
+
+* lexically inside a ``with self._cv:`` block (the named lock attribute
+  used as a context manager), or
+* in a method whose name ends in ``_locked`` (the repo's convention for
+  "caller already holds the lock"), or
+* in ``__init__`` (no concurrency before construction completes).
+
+Inheritance is resolved project-wide by class name, so
+``ContinuousBatcher`` (``batching.py``) inherits the guarded set of
+``AsyncWorkerLoop`` (``serving.py``).  The checker is lexical: it does
+not prove the *right* lock instance is held across helper calls, and it
+does not track accesses through aliases (``q = self._queue`` then
+mutating ``q``) — it is a convention enforcer in the guarded-by
+annotation style of Java's ``@GuardedBy`` / Abseil's thread
+annotations, not a full happens-before analysis.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.codrlint.core import (Checker, Finding, ModuleInfo, Project,
+                                 register_checker)
+
+GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+
+EXEMPT_METHOD_SUFFIX = "_locked"
+EXEMPT_METHODS = {"__init__"}
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """``self.X`` → ``"X"``; anything else → None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _guarded_decls(mod: ModuleInfo, cls: ast.ClassDef) -> dict[str, str]:
+    """attr → lock name, from ``# guarded-by: <lock>`` trailing comments
+    on ``self.X = ...`` statements anywhere in the class body."""
+    out: dict[str, str] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            attrs = [a for a in map(_self_attr, targets) if a]
+            if not attrs:
+                continue
+            m = GUARDED_RE.search(mod.line_text(node.lineno))
+            if m:
+                for a in attrs:
+                    out[a] = m.group(1)
+    return out
+
+
+class _MethodScanner(ast.NodeVisitor):
+    """Walk one method; track which guard locks are lexically held."""
+
+    def __init__(self, mod: ModuleInfo, cls_name: str, meth: str,
+                 guarded: dict[str, str]):
+        self.mod = mod
+        self.cls_name = cls_name
+        self.meth = meth
+        self.guarded = guarded
+        self.held: set[str] = set()
+        self.findings: list[Finding] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        acquired = set()
+        for item in node.items:
+            expr = item.context_expr
+            # `with self._cv:` / `with self._cv.acquire_timeout(...)` —
+            # any context expression rooted at self.<lock> counts
+            attr = _self_attr(expr)
+            if attr is None and isinstance(expr, ast.Call):
+                attr = _self_attr(expr.func)
+                if attr is None and isinstance(expr.func, ast.Attribute):
+                    attr = _self_attr(expr.func.value)
+            if attr in set(self.guarded.values()):
+                acquired.add(attr)
+        newly = acquired - self.held
+        self.held |= newly
+        try:
+            self.generic_visit(node)
+        finally:
+            self.held -= newly
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _self_attr(node)
+        if attr is not None and attr in self.guarded:
+            lock = self.guarded[attr]
+            if lock not in self.held:
+                self.findings.append(Finding(
+                    "lock-discipline", self.mod.rel, node.lineno,
+                    f"{self.cls_name}.{self.meth}:{attr}",
+                    f"self.{attr} (guarded-by: {lock}) accessed in "
+                    f"{self.cls_name}.{self.meth} without holding "
+                    f"self.{lock} — wrap in 'with self.{lock}:' or move "
+                    f"to a *{EXEMPT_METHOD_SUFFIX} method"))
+        self.generic_visit(node)
+
+    # nested defs inside a method run on unknown threads later; the
+    # lexical lock context does NOT carry into them unless they are
+    # called in place — be conservative and keep the current held set
+    # (closures in this repo are dispatch thunks invoked under the same
+    # caller; a wrong 'held' would only arise from storing the closure,
+    # which the serving stack never does with guarded state).
+
+
+class LockDisciplineChecker(Checker):
+    name = "lock-discipline"
+    description = ("attributes annotated '# guarded-by: <lock>' are only "
+                   "touched under 'with self.<lock>:' or in *_locked "
+                   "methods")
+
+    def finalize(self, project: Project):
+        findings: list[Finding] = []
+        # pass 1: declarations per class
+        decls: dict[str, dict[str, str]] = {}
+        bases: dict[str, list[str]] = {}
+        for cls_name, defs in project.class_index.items():
+            merged: dict[str, str] = {}
+            base_names: list[str] = []
+            for mod, cls in defs:
+                merged.update(_guarded_decls(mod, cls))
+                for b in cls.bases:
+                    if isinstance(b, ast.Name):
+                        base_names.append(b.id)
+                    elif isinstance(b, ast.Attribute):
+                        base_names.append(b.attr)
+            if merged:
+                decls[cls_name] = merged
+            bases[cls_name] = base_names
+
+        def effective(cls_name: str, seen=None) -> dict[str, str]:
+            seen = seen or set()
+            if cls_name in seen:
+                return {}
+            seen.add(cls_name)
+            out: dict[str, str] = {}
+            for b in bases.get(cls_name, ()):
+                out.update(effective(b, seen))
+            out.update(decls.get(cls_name, {}))
+            return out
+
+        # pass 2: enforce in every class that sees a guarded attr
+        for cls_name, defs in project.class_index.items():
+            guarded = effective(cls_name)
+            if not guarded:
+                continue
+            for mod, cls in defs:
+                for item in cls.body:
+                    if not isinstance(item, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                        continue
+                    if (item.name in EXEMPT_METHODS
+                            or item.name.endswith(EXEMPT_METHOD_SUFFIX)):
+                        continue
+                    sc = _MethodScanner(mod, cls_name, item.name, guarded)
+                    for stmt in item.body:
+                        sc.visit(stmt)
+                    findings.extend(sc.findings)
+        return findings
+
+
+register_checker(LockDisciplineChecker())

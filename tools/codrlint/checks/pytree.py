@@ -1,0 +1,123 @@
+"""pytree-registration: leaf classes that cross jit must be registered.
+
+A dataclass whose instances ride inside jitted computations
+(``PackedWeight`` packs inside ``prefill``/``decode_step`` graphs,
+``PagedKV`` pools inside the pooled decode step) silently degrades to
+an opaque leaf — or hard-errors — the first time it crosses a
+``jax.jit`` boundary unless it is pytree-registered.  PR 5 and PR 9
+established the convention; this checker enforces it:
+
+**Required** classes are (a) the known jit-crossing leaves
+(:data:`REQUIRED_NAMES`), and (b) any ``@dataclass`` whose fields
+include a ``jax.Array`` / ``jnp.ndarray`` annotation or a field typed
+as another required class (transitively — ``PackedLinear`` is required
+because its ``weight`` field is a ``PackedWeight``).
+
+**Registered** means, anywhere in the linted tree: a
+``jax.tree_util.register_pytree_node(Cls, ...)`` /
+``register_dataclass(Cls, ...)`` call, or the
+``@jax.tree_util.register_pytree_node_class`` decorator, or defining
+``tree_flatten`` + ``tree_unflatten`` behind that decorator.
+
+Host-side containers deliberately kept OUT of jit (e.g. ``PagePool``,
+whose free-list must never be traced) are exempt by not having array
+fields; a new jit-crossing class with array fields must either register
+or carry a ``# codrlint: disable=pytree-registration`` with rationale.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.codrlint.core import (Checker, Finding, Project, dotted_name,
+                                 register_checker)
+
+REQUIRED_NAMES = {"PackedWeight", "PackedLinear", "PackedEmbedding",
+                  "PagedKV"}
+ARRAY_ANNOTATIONS = {"jax.Array", "jnp.ndarray", "jax.numpy.ndarray",
+                     "Array"}
+REGISTER_CALLS = {"register_pytree_node", "register_dataclass",
+                  "register_pytree_node_class",
+                  "register_pytree_with_keys_class"}
+
+
+def _is_dataclass(cls: ast.ClassDef) -> bool:
+    for d in cls.decorator_list:
+        target = d.func if isinstance(d, ast.Call) else d
+        if dotted_name(target).split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+def _field_types(cls: ast.ClassDef) -> list[str]:
+    out = []
+    for item in cls.body:
+        if isinstance(item, ast.AnnAssign) and item.annotation is not None:
+            ann = item.annotation
+            if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+                out.append(ann.value)
+            else:
+                name = dotted_name(ann)
+                if name:
+                    out.append(name)
+    return out
+
+
+class PytreeChecker(Checker):
+    name = "pytree-registration"
+    description = ("jit-crossing leaf dataclasses (PackedWeight/-Linear/"
+                   "-Embedding, PagedKV, and any dataclass with jax.Array "
+                   "fields) are pytree-registered")
+
+    def finalize(self, project: Project):
+        registered: set[str] = set()
+        classes: dict[str, tuple] = {}          # name → (mod, cls)
+        for mod in project.modules:
+            if mod.tree is None:
+                continue
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef):
+                    classes.setdefault(node.name, (mod, node))
+                    for d in node.decorator_list:
+                        target = d.func if isinstance(d, ast.Call) else d
+                        if (dotted_name(target).split(".")[-1]
+                                in REGISTER_CALLS):
+                            registered.add(node.name)
+                elif isinstance(node, ast.Call):
+                    fn = dotted_name(node.func).split(".")[-1]
+                    if fn in REGISTER_CALLS and node.args:
+                        first = node.args[0]
+                        if isinstance(first, ast.Name):
+                            registered.add(first.id)
+
+        # required set: names + array-fielded dataclasses, to fixpoint
+        required: set[str] = {n for n in REQUIRED_NAMES if n in classes}
+        for name, (mod, cls) in classes.items():
+            if _is_dataclass(cls) and any(
+                    t in ARRAY_ANNOTATIONS for t in _field_types(cls)):
+                required.add(name)
+        changed = True
+        while changed:
+            changed = False
+            for name, (mod, cls) in classes.items():
+                if name in required or not _is_dataclass(cls):
+                    continue
+                if any(t.split(".")[-1] in required
+                       for t in _field_types(cls)):
+                    required.add(name)
+                    changed = True
+
+        findings = []
+        for name in sorted(required):
+            if name in registered:
+                continue
+            mod, cls = classes[name]
+            findings.append(Finding(
+                "pytree-registration", mod.rel, cls.lineno,
+                f"{name}", f"class {name} carries jax arrays across jit "
+                f"boundaries but is not pytree-registered — add "
+                f"jax.tree_util.register_pytree_node({name}, ...) (or "
+                f"the register_pytree_node_class decorator)"))
+        return findings
+
+
+register_checker(PytreeChecker())

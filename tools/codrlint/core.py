@@ -1,0 +1,362 @@
+"""codrlint core: finding model, suppressions, baseline, runner.
+
+The checkers themselves live in :mod:`tools.codrlint.checks`; this
+module is the harness they plug into:
+
+* :class:`Finding` — one violation: check name, file, line, a stable
+  ``key`` (symbol-level, line-number free — what the baseline matches
+  on), and the human message.
+* :class:`ModuleInfo` — one parsed file: path, source, AST, and the
+  per-line suppression table (``# codrlint: disable=<check> — rationale``).
+* :class:`Project` — every module of one run plus cross-file indices
+  (class map for inheritance, registered-pytree set, ...).  Checkers
+  that need whole-program context implement :meth:`Checker.finalize`.
+* :class:`Checker` — the plugin protocol; concrete checkers register
+  via :func:`register_checker` (import-time, like the backend registry
+  in ``repro.core.backends``).
+* :func:`run` — parse paths, run every checker, apply suppressions and
+  the committed baseline, return a :class:`Report`.
+
+Suppression convention (docs/DESIGN.md §7): a finding is silenced by an
+inline comment on the finding's line or the line above::
+
+    x = np.asarray(y)   # codrlint: disable=jit-purity — trace-time only
+
+The rationale (text after the dash/colon) is MANDATORY: a bare
+``disable=`` without one is itself reported as a ``bad-suppression``
+finding, so silencing a checker always leaves a reviewable why.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+
+SUPPRESS_RE = re.compile(
+    r"#\s*codrlint:\s*disable=([A-Za-z0-9_,-]+)"
+    r"(?:\s*(?:[-—–:]+)\s*(.*))?\s*$")
+
+DEFAULT_PATHS = ("src", "tools")
+BASELINE_DEFAULT = pathlib.Path(__file__).parent / "baseline.json"
+
+# files codrlint never lints: its own fixture corpus is deliberately
+# full of violations
+EXCLUDE_PARTS = {"lint_fixtures", "__pycache__"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation.  ``key`` is the stable symbol-level identity used
+    for baseline matching — it must not contain a line number, so a
+    grandfathered finding survives unrelated edits above it."""
+
+    check: str
+    path: str                  # repo-relative, forward slashes
+    line: int
+    key: str                   # e.g. "CodrBatchServer.flush:_queue"
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.check}:{self.path}:{self.key}"
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.check}] {self.message}"
+
+    def to_json(self) -> dict:
+        return {"check": self.check, "path": self.path, "line": self.line,
+                "key": self.key, "message": self.message,
+                "fingerprint": self.fingerprint}
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    checks: tuple[str, ...]
+    rationale: str
+    used: bool = False
+
+
+class ModuleInfo:
+    """One parsed source file."""
+
+    def __init__(self, path: pathlib.Path, root: pathlib.Path):
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.source = path.read_text(encoding="utf-8", errors="replace")
+        self.lines = self.source.splitlines()
+        self.tree: ast.Module | None = None
+        self.parse_error: str | None = None
+        try:
+            self.tree = ast.parse(self.source, filename=str(path))
+        except SyntaxError as e:
+            self.parse_error = f"{type(e).__name__}: {e.msg} (line {e.lineno})"
+        self.suppressions: dict[int, Suppression] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(text)
+            if m:
+                checks = tuple(c.strip() for c in m.group(1).split(",")
+                               if c.strip())
+                self.suppressions[i] = Suppression(
+                    i, checks, (m.group(2) or "").strip())
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def suppression_for(self, check: str, lineno: int) -> Suppression | None:
+        """A suppression applies to findings on its own line or the
+        line directly below (comment-above style)."""
+        for ln in (lineno, lineno - 1):
+            s = self.suppressions.get(ln)
+            if s and (check in s.checks or "all" in s.checks):
+                return s
+        return None
+
+
+class Project:
+    """All modules of one run + lazily-built cross-file indices."""
+
+    def __init__(self, modules: list[ModuleInfo]):
+        self.modules = modules
+        self._class_index: dict[str, list[tuple[ModuleInfo,
+                                                ast.ClassDef]]] | None = None
+
+    @property
+    def class_index(self) -> dict[str, list[tuple[ModuleInfo, ast.ClassDef]]]:
+        """Top-level class name → every (module, ClassDef) defining it.
+        Name-based (no import resolution) — good enough for a repo that
+        does not reuse class names across packages, and documented as
+        such in docs/DESIGN.md §7."""
+        if self._class_index is None:
+            idx: dict[str, list[tuple[ModuleInfo, ast.ClassDef]]] = {}
+            for mod in self.modules:
+                if mod.tree is None:
+                    continue
+                for node in ast.walk(mod.tree):
+                    if isinstance(node, ast.ClassDef):
+                        idx.setdefault(node.name, []).append((mod, node))
+            self._class_index = idx
+        return self._class_index
+
+    def module_by_rel(self, rel: str) -> ModuleInfo | None:
+        for m in self.modules:
+            if m.rel == rel:
+                return m
+        return None
+
+
+class Checker:
+    """Plugin protocol.  ``check_module`` runs per file;
+    ``finalize`` runs once afterwards with whole-project context."""
+
+    name: str = ""
+    description: str = ""
+
+    def check_module(self, mod: ModuleInfo, project: Project):
+        return ()
+
+    def finalize(self, project: Project):
+        return ()
+
+
+_CHECKERS: dict[str, Checker] = {}
+
+
+def register_checker(checker: Checker) -> Checker:
+    if not checker.name:
+        raise ValueError("checker must set a non-empty .name")
+    if checker.name in _CHECKERS:
+        raise ValueError(f"checker {checker.name!r} already registered")
+    _CHECKERS[checker.name] = checker
+    return checker
+
+
+def registered_checkers() -> dict[str, Checker]:
+    # import-time registration, like repro.core.backends
+    from tools.codrlint import checks  # noqa: F401
+    return dict(_CHECKERS)
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by checkers
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.tree_util.register_pytree_node`` → that string; '' when the
+    expression is not a plain dotted name."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def literal_or_none(node: ast.AST):
+    try:
+        return ast.literal_eval(node)
+    except (ValueError, TypeError, SyntaxError):
+        return None
+
+
+def top_level_bindings(tree: ast.Module) -> set[str]:
+    """Names bound at module top level: defs, classes, imports, assigns."""
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                names.add((a.asname or a.name).split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                names.add(a.asname or a.name)
+        elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                for leaf in ast.walk(t):
+                    if isinstance(leaf, ast.Name):
+                        names.add(leaf.id)
+        elif isinstance(node, (ast.If, ast.Try)):
+            # common guarded-import patterns bind inside these blocks
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Import, ast.ImportFrom)):
+                    for a in sub.names:
+                        if a.name != "*":
+                            names.add((a.asname or a.name).split(".")[0])
+                elif isinstance(sub, (ast.FunctionDef, ast.ClassDef)):
+                    names.add(sub.name)
+                elif isinstance(sub, ast.Assign):
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            names.add(t.id)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]            # new findings (fail the run)
+    suppressed: int
+    baselined: int
+    stale_baseline: list[str]          # fingerprints no longer observed
+    bad_suppressions: list[Finding]    # disable= without a rationale
+    checked_files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.bad_suppressions
+
+    def to_json(self) -> dict:
+        return {
+            "ok": self.ok,
+            "checked_files": self.checked_files,
+            "suppressed": self.suppressed,
+            "baselined": self.baselined,
+            "stale_baseline": self.stale_baseline,
+            "findings": [f.to_json() for f in self.findings],
+            "bad_suppressions": [f.to_json()
+                                 for f in self.bad_suppressions],
+        }
+
+
+def iter_py_files(paths, root: pathlib.Path):
+    for p in paths:
+        p = (root / p) if not pathlib.Path(p).is_absolute() \
+            else pathlib.Path(p)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not EXCLUDE_PARTS.intersection(f.parts):
+                    yield f
+
+
+def load_baseline(path: pathlib.Path | None) -> set[str]:
+    path = path or BASELINE_DEFAULT
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    if isinstance(data, dict):
+        data = data.get("fingerprints", [])
+    return set(data)
+
+
+def run(paths=DEFAULT_PATHS, *, root: pathlib.Path | None = None,
+        baseline: pathlib.Path | None | bool = None,
+        only: tuple[str, ...] | None = None) -> Report:
+    """Lint ``paths`` (files or directories, relative to ``root``).
+
+    ``baseline=False`` disables baseline matching entirely (fixture
+    tests use this); ``None`` uses the committed ``baseline.json``.
+    ``only`` restricts to a subset of checker names.
+    """
+    root = root or pathlib.Path(__file__).resolve().parent.parent.parent
+    checkers = registered_checkers()
+    if only:
+        unknown = set(only) - set(checkers)
+        if unknown:
+            raise ValueError(f"unknown checker(s): {sorted(unknown)}; "
+                             f"available: {sorted(checkers)}")
+        checkers = {k: v for k, v in checkers.items() if k in only}
+
+    modules = [ModuleInfo(f, root) for f in iter_py_files(paths, root)]
+    project = Project(modules)
+
+    raw: list[Finding] = []
+    for mod in modules:
+        if mod.parse_error:
+            raw.append(Finding("parse", mod.rel, 1, "parse-error",
+                               f"file does not parse: {mod.parse_error}"))
+            continue
+        for checker in checkers.values():
+            raw.extend(checker.check_module(mod, project))
+    for checker in checkers.values():
+        raw.extend(checker.finalize(project))
+
+    # suppressions (rationale mandatory)
+    mod_by_rel = {m.rel: m for m in modules}
+    kept: list[Finding] = []
+    bad_supp: list[Finding] = []
+    suppressed = 0
+    for f in raw:
+        mod = mod_by_rel.get(f.path)
+        supp = mod.suppression_for(f.check, f.line) if mod else None
+        if supp is None:
+            kept.append(f)
+        elif not supp.rationale:
+            supp.used = True
+            bad_supp.append(Finding(
+                "bad-suppression", f.path, supp.line,
+                f"{f.check}:{f.key}",
+                f"suppression of [{f.check}] has no rationale — write "
+                f"'# codrlint: disable={f.check} — <why>'"))
+        else:
+            supp.used = True
+            suppressed += 1
+
+    if baseline is False:
+        base: set[str] = set()
+    else:
+        base = load_baseline(baseline if isinstance(baseline, pathlib.Path)
+                             else None)
+    new = [f for f in kept if f.fingerprint not in base]
+    baselined = len(kept) - len(new)
+    stale = sorted(base - {f.fingerprint for f in kept})
+    new.sort(key=lambda f: (f.path, f.line, f.check))
+    return Report(findings=new, suppressed=suppressed, baselined=baselined,
+                  stale_baseline=stale, bad_suppressions=bad_supp,
+                  checked_files=len(modules))
